@@ -1,0 +1,40 @@
+"""Paper Fig. 2: NN-Acc vs Graph-Acc across degree/feature regimes.
+
+Claim R5: low-degree graphs favor NN-Acc (compute-rich), high-degree favor
+Graph-Acc (cache-rich); NN-Acc is memory-bound on GCN workloads (latency
+flat as output dim scales 16->256)."""
+from __future__ import annotations
+
+from repro.core import (NN_ACC, GRAPH_ACC, aggregation_traffic, layer_cost,
+                        LayerShape)
+from .common import BENCH_DATASETS, dataset, emit
+
+
+def main() -> None:
+    for name, spec in BENCH_DATASETS.items():
+        g = dataset(name)
+        d = spec.feat_dim
+        shape = LayerShape(g.num_nodes, g.num_valid_edges, d, 128)
+        costs = {}
+        for p in (NN_ACC, GRAPH_ACC):
+            tr = aggregation_traffic(p, g, d)
+            costs[p.name] = layer_cost(p, shape, tr, train=True)
+        ratio = costs["Graph-Acc"].latency_s / costs["NN-Acc"].latency_s
+        deg = g.num_valid_edges / g.num_nodes
+        winner = "NN-Acc" if ratio > 1 else "Graph-Acc"
+        emit(f"fig2/{name}/graphacc_over_nnacc_latency", 0.0,
+             f"{ratio:.2f} (deg={deg:.1f}, winner={winner})")
+    # NN-Acc memory-bound check: latency vs output dim on REDDIT regime
+    g = dataset("REDDIT")
+    d = BENCH_DATASETS["REDDIT"].feat_dim
+    tr = aggregation_traffic(NN_ACC, g, d)
+    lat16 = layer_cost(NN_ACC, LayerShape(g.num_nodes, g.num_valid_edges, d,
+                                          16), tr).latency_s
+    lat256 = layer_cost(NN_ACC, LayerShape(g.num_nodes, g.num_valid_edges, d,
+                                           256), tr).latency_s
+    emit("fig2/REDDIT/nnacc_latency_ratio_d256_vs_d16", 0.0,
+         f"{lat256 / lat16:.2f} (paper: ~1.0 => memory-bound)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 8 + §V-D: Rubik vs NN-Acc vs GPU — speedup and energy.
+
+Claims: R3 Rubik/NN-Acc speedup 1.30-14.16x; R4 energy efficiency vs GPU
+26.3-1375.2x (and 1.13-8.20x vs NN-Acc); GPU wins on small graphs, Rubik on
+large ones (GraphSage); deeper GIN favors Rubik everywhere."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (NN_ACC, RUBIK, GPU, aggregation_traffic, gcn_cost,
+                        model_shapes, minhash_reorder, build_shared_plan,
+                        GRAPHSAGE_DIMS, GIN_DIMS)
+from .common import BENCH_DATASETS, dataset, emit
+
+
+def main() -> None:
+    for model_name, dims in (("GraphSage", GRAPHSAGE_DIMS), ("GIN", GIN_DIMS)):
+        spd_nn, eff_gpu, eff_nn = [], [], []
+        for name, spec in BENCH_DATASETS.items():
+            g = dataset(name)
+            d = spec.feat_dim
+            g_lr = g.permute(minhash_reorder(g))
+            plan = build_shared_plan(g_lr)
+            shapes = model_shapes(g, dims(d, spec.num_classes))
+            costs = {}
+            # all platforms consume the same reordered graph (paper §V-C)
+            for p in (NN_ACC, RUBIK, GPU):
+                tr = aggregation_traffic(
+                    p, g_lr, d, plan=plan if p is RUBIK else None)
+                costs[p.name] = gcn_cost(p, shapes, [tr] * len(shapes))
+            r, n, gpu = costs["Rubik"], costs["NN-Acc"], costs["GPU-P6000"]
+            emit(f"fig8/{model_name}/{name}/speedup_vs_nnacc", 0.0,
+                 f"{r.speedup_vs(n):.2f}x")
+            emit(f"fig8/{model_name}/{name}/speedup_vs_gpu", 0.0,
+                 f"{r.speedup_vs(gpu):.2f}x")
+            emit(f"fig8/{model_name}/{name}/energy_eff_vs_gpu", 0.0,
+                 f"{r.energy_eff_vs(gpu):.1f}x")
+            emit(f"fig8/{model_name}/{name}/energy_eff_vs_nnacc", 0.0,
+                 f"{r.energy_eff_vs(n):.2f}x")
+            spd_nn.append(r.speedup_vs(n))
+            eff_gpu.append(r.energy_eff_vs(gpu))
+            eff_nn.append(r.energy_eff_vs(n))
+        emit(f"fig8/{model_name}/RANGE/speedup_vs_nnacc", 0.0,
+             f"{min(spd_nn):.2f}-{max(spd_nn):.2f}x (paper GIN: 1.35-14.16x,"
+             f" Sage: 1.30-12.05x)")
+        emit(f"fig8/{model_name}/RANGE/energy_eff_vs_gpu", 0.0,
+             f"{min(eff_gpu):.1f}-{max(eff_gpu):.1f}x (paper: 26.3-1375.2x)")
+        emit(f"fig8/{model_name}/RANGE/energy_eff_vs_nnacc", 0.0,
+             f"{min(eff_nn):.2f}-{max(eff_nn):.2f}x (paper: 1.13-8.20x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Fig. 9: Index-order vs LR vs LR&CR — speedup + off-chip traffic.
+
+Claims under test (paper §V-B):
+  R1  LR removes ~69% (GraphSage) / ~58% (GIN) of off-chip traffic and gives
+      ~3.14x / ~2.59x speedup over index order (dataset average).
+  R2  LR&CR eliminates >90% of remaining accesses on high-degree graphs.
+
+Method: exact LRU G-D/G-C cache simulation (core/cache_model) over the real
+aggregation access streams of each schedule, plus the Rubik latency model
+(Table II config) for speedups — the same pipeline class the paper uses
+(cycle-accurate sim).  Datasets are CPU-scale stand-ins preserving degree /
+feature / community regimes (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (minhash_reorder, build_shared_plan, simulate_gd,
+                        simulate_gd_gc, RUBIK, layer_cost, model_shapes,
+                        GRAPHSAGE_DIMS, GIN_DIMS, gcn_cost)
+from .common import BENCH_DATASETS, dataset, emit
+
+
+def run_dataset(name: str, dims) -> dict:
+    g = dataset(name)
+    d_feat = BENCH_DATASETS[name].feat_dim
+    cache = RUBIK.private_cache_bytes
+    # G-C entries have reuse distance ~1 row (buddy destinations are
+    # adjacent), so a small G-C slice suffices; G-D keeps 7/8 of the SRAM
+    gd_share, gc_share = (cache * 7) // 8, cache // 8
+    g_lr = g.permute(minhash_reorder(g, num_hashes=8))
+    plan = build_shared_plan(g_lr, levels=1)
+
+    t_index = simulate_gd(g, RUBIK.pes, cache, d_feat)
+    t_lr = simulate_gd(g_lr, RUBIK.pes, cache, d_feat)
+    t_lrcr = simulate_gd_gc(g_lr, plan, RUBIK.pes, gd_share, gc_share, d_feat)
+
+    shapes = model_shapes(g, dims(d_feat, BENCH_DATASETS[name].num_classes))
+    cost = lambda tr: gcn_cost(RUBIK, shapes, [tr] * len(shapes))
+    c_index, c_lr, c_lrcr = cost(t_index), cost(t_lr), cost(t_lrcr)
+    return {
+        "lr_traffic_reduction": 1 - t_lr.offchip_bytes / t_index.offchip_bytes,
+        "lrcr_traffic_reduction":
+            1 - t_lrcr.offchip_bytes / t_index.offchip_bytes,
+        "lrcr_extra_vs_lr": 1 - t_lrcr.offchip_bytes / max(t_lr.offchip_bytes,
+                                                           1),
+        "lr_speedup": c_index.latency_s / c_lr.latency_s,
+        "lrcr_speedup": c_index.latency_s / c_lrcr.latency_s,
+        "cr_reduction_saved": 1 - (t_lrcr.reductions_performed
+                                   / max(t_lr.reductions_performed, 1)),
+    }
+
+
+def main() -> None:
+    for model_name, dims in (("GraphSage", GRAPHSAGE_DIMS), ("GIN", GIN_DIMS)):
+        reductions, speedups = [], []
+        for name in BENCH_DATASETS:
+            r = run_dataset(name, dims)
+            emit(f"fig9/{model_name}/{name}/lr_traffic_reduction", 0.0,
+                 f"{r['lr_traffic_reduction']:.3f}")
+            emit(f"fig9/{model_name}/{name}/lrcr_traffic_reduction", 0.0,
+                 f"{r['lrcr_traffic_reduction']:.3f}")
+            emit(f"fig9/{model_name}/{name}/lr_speedup", 0.0,
+                 f"{r['lr_speedup']:.2f}x")
+            emit(f"fig9/{model_name}/{name}/lrcr_speedup", 0.0,
+                 f"{r['lrcr_speedup']:.2f}x")
+            reductions.append(r["lr_traffic_reduction"])
+            speedups.append(r["lr_speedup"])
+        emit(f"fig9/{model_name}/MEAN/lr_traffic_reduction", 0.0,
+             f"{np.mean(reductions):.3f} (paper: 0.69 Sage / 0.58 GIN)")
+        emit(f"fig9/{model_name}/MEAN/lr_speedup", 0.0,
+             f"{np.mean(speedups):.2f}x (paper: 3.14x Sage / 2.59x GIN)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_fig2_platforms",
+    "benchmarks.bench_fig9_scheduling",
+    "benchmarks.bench_fig8_speedup_energy",
+    "benchmarks.bench_fig10_preprocessing",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_halo",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"# {mod_name} FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

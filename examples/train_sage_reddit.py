@@ -1,0 +1,77 @@
+"""End-to-end driver (deliverable b): train GraphSAGE on a REDDIT-style
+community graph with the full production stack — LSH reordering, sampled
+minibatches, Adam, gradient clipping, async checkpointing, straggler
+watchdog, deterministic restart.
+
+  PYTHONPATH=src python examples/train_sage_reddit.py [--steps 200] [--scale 0.02]
+"""
+import argparse
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph import reddit_like, NeighborSampler
+from repro.core import minhash_reorder
+from repro.models import sage_init
+from repro.models.sage_gin import sage_block_apply
+from repro.nn.layers import linear_init, linear_apply, cross_entropy
+from repro.train import adam, make_train_step, AsyncCheckpointer, StepWatchdog
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--batch-nodes", type=int, default=512)
+    args = ap.parse_args()
+
+    g = reddit_like(scale=args.scale)
+    g = g.permute(minhash_reorder(g))     # Rubik preprocessing (one-off)
+    d = g.node_feat.shape[1]
+    classes = int(g.labels.max()) + 1
+    print(f"graph: {g.num_nodes} nodes {g.num_valid_edges} edges d={d}")
+
+    sampler = NeighborSampler(g, fanouts=(15, 10), seed=0)
+    key = jax.random.PRNGKey(0)
+    params = {"sage": sage_init(key, [d, 256, 256]),
+              "head": linear_init(jax.random.fold_in(key, 1), 256, classes)}
+
+    def loss_fn(p, batch):
+        h = sage_block_apply(p["sage"], batch["x"], batch["blocks"])
+        logits = linear_apply(p["head"], h[batch["seed_rows"]])
+        return cross_entropy(logits, batch["labels"])
+
+    step = make_train_step(loss_fn, adam(1e-3), donate=False)
+    opt_state = adam(1e-3).init(params)
+    ckpt = AsyncCheckpointer(tempfile.mkdtemp(prefix="sage_ckpt_"))
+    watchdog = StepWatchdog()
+    import time
+    losses = []
+    for i, mb in enumerate(sampler.batches(args.batch_nodes, args.steps)):
+        lut = {int(n): r for r, n in enumerate(mb.input_nodes)}
+        batch = {
+            "x": jnp.asarray(g.node_feat[mb.input_nodes]),
+            "blocks": [{"src": jnp.asarray(s), "dst": jnp.asarray(dd)}
+                       for s, dd in zip(mb.edge_src, mb.edge_dst)],
+            "seed_rows": jnp.asarray([lut[int(n)] for n in mb.seeds]),
+            "labels": jnp.asarray(g.labels[mb.seeds]),
+        }
+        t0 = time.time()
+        params, opt_state, loss = step(params, opt_state, batch)
+        watchdog.observe(time.time() - t0)
+        losses.append(float(loss))
+        if i % 20 == 0:
+            print(f"step {i:5d} loss {float(loss):.4f}")
+        if i and i % 100 == 0:
+            ckpt.save(i, params, opt_state)
+    ckpt.close()
+    print(f"final loss {np.mean(losses[-10:]):.4f} "
+          f"(start {np.mean(losses[:10]):.4f}); "
+          f"stragglers flagged: {watchdog.flagged}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn"
+
+
+if __name__ == "__main__":
+    main()

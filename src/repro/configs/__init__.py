@@ -1,0 +1,6 @@
+from .base import (ArchSpec, REGISTRY, register, get, all_archs,
+                   LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES)
+
+
+def _load_all():
+    from . import registry  # noqa: F401

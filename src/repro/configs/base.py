@@ -1,0 +1,94 @@
+"""Architecture registry: every assigned arch is an ArchSpec exposing a
+uniform surface the launcher/dry-run/tests consume.
+
+An ArchSpec provides, per named input shape ("cell"):
+  * ``abstract_state(mesh)``      — eval_shape'd params (+ opt state) pytrees;
+  * ``input_specs(shape)``        — ShapeDtypeStruct stand-ins for step inputs;
+  * ``step_fn(shape)``            — the function to lower (train or serve);
+  * ``shardings(mesh, shape)``    — (state_specs, input_specs_sharding, out).
+Smoke tests use ``reduced()`` — a tiny config of the same family that runs a
+real forward/train step on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+REGISTRY: Dict[str, "ArchSpec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One (architecture x input-shape) dry-run cell."""
+
+    shape_name: str
+    kind: str                      # "train" | "prefill" | "decode" | "serve"
+    meta: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                    # "lm" | "gnn" | "recsys"
+    shapes: Tuple[str, ...]
+    build: Callable[[], Any]       # returns the family-specific bundle
+    notes: str = ""
+
+    def bundle(self):
+        return self.build()
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ArchSpec:
+    if name not in REGISTRY:
+        from . import _load_all        # lazy-populate
+        _load_all()
+    return REGISTRY[name]
+
+
+def all_archs():
+    from . import _load_all
+    _load_all()
+    return dict(REGISTRY)
+
+
+# Shared LM shape table (the brief's 4 LM cells)
+LM_SHAPES = {
+    "train_4k":    {"kind": "train",   "seq": 4096,    "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768,   "batch": 32},
+    "decode_32k":  {"kind": "decode",  "seq": 32768,   "batch": 128},
+    "long_500k":   {"kind": "decode",  "seq": 524288,  "batch": 1},
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": {"kind": "train", "n_nodes": 2708, "n_edges": 10556,
+                      "d_feat": 1433},
+    "minibatch_lg":  {"kind": "train", "n_nodes": 232_965,
+                      "n_edges": 114_615_892, "batch_nodes": 1024,
+                      "fanout": (15, 10), "d_feat": 602},
+    "ogb_products":  {"kind": "train", "n_nodes": 2_449_029,
+                      "n_edges": 61_859_140, "d_feat": 100},
+    "molecule":      {"kind": "train", "n_nodes": 30, "n_edges": 64,
+                      "batch": 128},
+}
+
+RECSYS_SHAPES = {
+    "train_batch":    {"kind": "train", "batch": 65_536},
+    "serve_p99":      {"kind": "serve", "batch": 512},
+    "serve_bulk":     {"kind": "serve", "batch": 262_144},
+    # 1M candidates padded to 2^20 so the candidate axis shards over the
+    # full mesh (1,000,000 % 512 != 0)
+    "retrieval_cand": {"kind": "serve", "batch": 1,
+                       "n_candidates": 1_048_576},
+}
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult

@@ -1,0 +1,21 @@
+"""llama4-maverick-400b-a17b [hf:meta-llama/Llama-4]: 48L d_model=5120 40H
+(GQA kv=8) d_ff=8192, vocab=202048, MoE 128e top-1, interleaved every 2
+layers + shared expert (Llama-4 style; yields ~400B total / ~17B active —
+see LMConfig.param_count).  bf16 Adam moments: full fp32 optimizer state for
+400B params exceeds a 256-chip v5e pod's 4TB HBM (DESIGN.md §5)."""
+import jax.numpy as jnp
+from .base import ArchSpec, register, LM_SHAPES
+from .families import LMBundle
+from ..models.transformer import LMConfig
+
+CONFIG = LMConfig("llama4-maverick-400b-a17b", n_layers=48, d_model=5120,
+                  n_heads=40, n_kv=8, d_ff=8192, vocab=202048,
+                  n_experts=128, top_k=1, moe_every=2, shared_expert=True,
+                  param_dtype=jnp.bfloat16)
+REDUCED = LMConfig("llama4-reduced", n_layers=2, d_model=128, n_heads=8,
+                   n_kv=2, d_ff=128, vocab=512, n_experts=8, top_k=1,
+                   moe_every=2, shared_expert=True, dtype=jnp.float32)
+
+SPEC = register(ArchSpec(
+    name="llama4-maverick-400b-a17b", family="lm", shapes=tuple(LM_SHAPES),
+    build=lambda: LMBundle(CONFIG, moments_dtype=jnp.bfloat16)))

@@ -1,0 +1,17 @@
+"""Rubik's primary contribution: hierarchical graph/node-level decoupling,
+LSH reordering, shared-set computation reuse, block-sparse aggregation,
+hierarchical mapping, and the cache/perf models validating the paper."""
+from .reorder import (lsh_reorder, minhash_reorder, degree_reorder, bfs_reorder,
+                      identity_order, lsh_reorder_jax, mean_reuse_distance,
+                      bandwidth, REORDERINGS)
+from .shared_set import SharedSetPlan, build_shared_plan
+from .blocksparse import BlockEll, build_blockell, traffic_model, choose_block_shape
+from .aggregate import (segment_aggregate, shared_aggregate, blockell_matmul,
+                        blockell_aggregate)
+from .mapping import (GraphLevelMapping, NodeLevelTiling, map_graph_level,
+                      map_node_level, pe_edge_lists)
+from .cache_model import (LRUCache, TrafficReport, simulate_gd, simulate_gd_gc,
+                          schedule_comparison)
+from .perf_model import (Platform, NN_ACC, GRAPH_ACC, RUBIK, GPU, LayerShape,
+                         ModelCost, layer_cost, gcn_cost, aggregation_traffic,
+                         model_shapes, GRAPHSAGE_DIMS, GIN_DIMS)

@@ -1,0 +1,171 @@
+"""Latency + energy models for Rubik / NN-Acc / Graph-Acc / GPU (Table II).
+
+The paper evaluates with a cycle-accurate simulator + Design Compiler/McPAT
+energy numbers; we reproduce its *claims* (Figs 2, 8, 10) with a first-order
+analytical model over the same Table II configurations:
+
+  latency(stage) = max(compute_time, offchip_time)          (roofline form)
+  energy         = MACs*e_mac + sram_bytes*e_sram + dram_bytes*e_dram  (+P*t for GPU)
+
+Per-op energies are the standard 45nm numbers (Horowitz, ISSCC'14) the
+accelerator literature—including Rubik's own methodology—derives from.
+Aggregation off-chip traffic comes from the exact LRU cache simulation
+(`cache_model`), so schedule effects (Index / LR / LR&CR) flow through to
+latency and energy exactly as in the paper's pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..graph.structure import Graph
+from .cache_model import TrafficReport, simulate_gd, simulate_gd_gc
+from .shared_set import SharedSetPlan
+
+# ---- 45nm per-op energies (J) --------------------------------------------
+E_MAC32 = 4.6e-12          # 32b FP multiply-add
+E_SRAM_BYTE = 1.25e-12     # small private SRAM, per byte
+E_GBUF_BYTE = 6.0e-12      # MB-scale global buffer, per byte
+E_DRAM_BYTE = 160e-12      # off-chip DRAM, per byte
+GPU_AVG_POWER = 150.0      # W, nvidia-smi-sampled average (paper method)
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    """One Table II column."""
+
+    name: str
+    pes: int
+    macs_per_pe: int
+    freq_hz: float
+    mem_bw: float                  # B/s off-chip
+    private_cache_bytes: int       # per PE (0 = none)
+    global_buffer_bytes: int
+    gather_efficiency: float = 1.0   # fraction of BW usable on random gathers
+    dense_utilization: float = 0.85  # MAC utilization on dense matmul
+
+    @property
+    def macs_per_s(self) -> float:
+        return self.pes * self.macs_per_pe * self.freq_hz
+
+
+# Table II configurations (500 MHz, 432 GB/s shared across platforms)
+NN_ACC = Platform("NN-Acc", 64, 16 * 16, 500e6, 432e9,
+                  private_cache_bytes=0, global_buffer_bytes=2 << 20,
+                  gather_efficiency=0.25)
+GRAPH_ACC = Platform("Graph-Acc", 64, 1 * 4, 500e6, 432e9,
+                     private_cache_bytes=256 << 10, global_buffer_bytes=4 << 20,
+                     gather_efficiency=0.6)
+RUBIK = Platform("Rubik", 64, 4 * 8, 500e6, 432e9,
+                 private_cache_bytes=128 << 10, global_buffer_bytes=2 << 20,
+                 gather_efficiency=0.6)
+GPU = Platform("GPU-P6000", 3840, 1, 1.5e9, 432e9,
+               private_cache_bytes=48 << 10, global_buffer_bytes=3 << 20,
+               gather_efficiency=0.08, dense_utilization=0.35)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """One GCN layer's aggregation+update workload."""
+
+    num_nodes: int
+    num_edges: int          # reductions before any reuse optimization
+    d_in: int
+    d_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCost:
+    latency_s: float
+    energy_j: float
+    dram_bytes: int
+    macs: int
+
+    def speedup_vs(self, other: "ModelCost") -> float:
+        return other.latency_s / max(self.latency_s, 1e-30)
+
+    def energy_eff_vs(self, other: "ModelCost") -> float:
+        return other.energy_j / max(self.energy_j, 1e-30)
+
+
+def _stage_cost(p: Platform, macs: float, dram_bytes: float,
+                sram_bytes: float, gather: bool, util: Optional[float] = None
+                ) -> tuple:
+    util = util if util is not None else (p.dense_utilization if not gather else 1.0)
+    t_comp = macs / max(p.macs_per_s * util, 1.0)
+    bw = p.mem_bw * (p.gather_efficiency if gather else 1.0)
+    t_mem = dram_bytes / bw
+    e = (macs * E_MAC32 + dram_bytes * E_DRAM_BYTE + sram_bytes * E_SRAM_BYTE)
+    return max(t_comp, t_mem), e
+
+
+def layer_cost(p: Platform, shape: LayerShape, traffic: TrafficReport,
+               train: bool = True, bytes_per_el: int = 4) -> ModelCost:
+    """Aggregation + update cost for one layer (x3 for fwd+bwd if train)."""
+    n, e, di, do = (shape.num_nodes, shape.num_edges, shape.d_in, shape.d_out)
+
+    # ---- aggregation stage: vector adds, gather-typed traffic
+    reds = traffic.reductions_performed
+    agg_macs = reds * di                      # d-wide accumulate per reduction
+    agg_dram = traffic.offchip_bytes
+    agg_sram = reds * di * bytes_per_el       # cache/buffer reads
+    t_agg, e_agg = _stage_cost(p, agg_macs, agg_dram, agg_sram, gather=True)
+
+    # ---- update stage: dense (n, di) @ (di, do); weights stream via gbuf
+    upd_macs = n * di * do
+    w_bytes = di * do * bytes_per_el
+    # features stream in+out once; weights resident in global buffer
+    upd_dram = (n * (di + do)) * bytes_per_el + max(
+        0, w_bytes - p.global_buffer_bytes)
+    upd_sram = upd_macs * 0  # RF-level reuse folded into e_mac
+    t_upd, e_upd = _stage_cost(p, upd_macs, upd_dram,
+                               n * di * bytes_per_el, gather=False)
+
+    mult = 3.0 if train else 1.0  # fwd + input-grad + weight-grad passes
+    lat = (t_agg + t_upd) * mult
+    en = (e_agg + e_upd) * mult
+    if p.name.startswith("GPU"):
+        en = GPU_AVG_POWER * lat
+    return ModelCost(latency_s=lat, energy_j=en,
+                     dram_bytes=int((agg_dram + upd_dram) * mult),
+                     macs=int((agg_macs + upd_macs) * mult))
+
+
+def gcn_cost(p: Platform, shapes: Sequence[LayerShape],
+             traffics: Sequence[TrafficReport], train: bool = True) -> ModelCost:
+    costs = [layer_cost(p, s, t, train) for s, t in zip(shapes, traffics)]
+    return ModelCost(latency_s=sum(c.latency_s for c in costs),
+                     energy_j=sum(c.energy_j for c in costs),
+                     dram_bytes=sum(c.dram_bytes for c in costs),
+                     macs=sum(c.macs for c in costs))
+
+
+def aggregation_traffic(p: Platform, g: Graph, feat_dim: int,
+                        plan: Optional[SharedSetPlan] = None) -> TrafficReport:
+    """Traffic for platform p's cache config on graph g's current order."""
+    if p.private_cache_bytes == 0:
+        # no cache: every reduction loads its vector off-chip
+        valid = int(g.edge_mask.sum()) if g.edge_mask is not None else g.num_edges
+        return TrafficReport(feature_loads=valid, pair_hits=0,
+                             total_accesses=valid,
+                             offchip_bytes=valid * feat_dim * 4,
+                             hit_rate=0.0, reductions_performed=valid)
+    if plan is None:
+        return simulate_gd(g, p.pes, p.private_cache_bytes, feat_dim)
+    half = p.private_cache_bytes // 2
+    return simulate_gd_gc(g, plan, p.pes, half, half, feat_dim)
+
+
+def model_shapes(g: Graph, dims: Sequence[int]) -> list:
+    """LayerShape list for a GCN with hidden dims ``dims`` on graph ``g``
+    (dims[0] = input feature size)."""
+    e = int(g.edge_mask.sum()) if g.edge_mask is not None else g.num_edges
+    return [LayerShape(g.num_nodes, e, dims[i], dims[i + 1])
+            for i in range(len(dims) - 1)]
+
+
+# paper model configs (§V-A: PyG defaults)
+GRAPHSAGE_DIMS = lambda d_in, classes: [d_in, 256, classes]
+GIN_DIMS = lambda d_in, classes: [d_in, 128, 128, 128, 128, 128, 128, classes]

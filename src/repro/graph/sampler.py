@@ -1,0 +1,136 @@
+"""Fanout neighbor sampler (GraphSAGE-style) for minibatch training.
+
+Produces *static-shape* sampled blocks so the training step compiles once:
+layer l samples exactly ``fanout[l]`` neighbors per node with replacement when
+the true degree is smaller than the fanout (standard GraphSAGE practice), so
+no masking/padding is needed on the edge lists.
+
+The paper (§VI) argues reordering stays useful under batching/sampling because
+temporal reuse order is preserved within subgraphs; `sample_block` therefore
+emits sources in the graph's current (possibly reordered) id order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .structure import Graph, CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledBlock:
+    """One layer of a sampled computation block.
+
+    dst_nodes: (B,) global ids of destination nodes of this layer.
+    src_nodes: (B*fanout,) global ids of sampled sources (layer input nodes
+      are ``unique_nodes``; ``src_index`` maps each edge to its row there).
+    """
+
+    dst_nodes: np.ndarray
+    src_nodes: np.ndarray
+    fanout: int
+
+    @property
+    def num_dst(self) -> int:
+        return int(self.dst_nodes.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniBatch:
+    """L-layer sampled dependency: blocks[0] is the outermost (input) layer."""
+
+    blocks: List[SampledBlock]
+    seeds: np.ndarray
+    input_nodes: np.ndarray      # unique node ids whose features are gathered
+    # per-block edge lists with endpoints renumbered into input_nodes order:
+    edge_src: List[np.ndarray]
+    edge_dst: List[np.ndarray]
+    layer_sizes: List[int]
+
+
+class NeighborSampler:
+    """Uniform-with-replacement fanout sampler over CSR."""
+
+    def __init__(self, g: Graph, fanouts: Sequence[int], seed: int = 0):
+        self.g = g
+        self.csr: CSR = g.csr()
+        self.fanouts = list(fanouts)
+        self.rng = np.random.default_rng(seed)
+        self._deg = self.csr.row_lengths()
+
+    def _sample_neighbors(self, nodes: np.ndarray, fanout: int) -> np.ndarray:
+        """(B,) -> (B, fanout) sampled in-neighbors (self if isolated)."""
+        deg = self._deg[nodes]
+        offs = (self.rng.random((nodes.shape[0], fanout)) *
+                np.maximum(deg, 1)[:, None]).astype(np.int64)
+        base = self.csr.indptr[nodes][:, None]
+        idx = base + offs
+        flat = self.csr.indices[np.minimum(idx, self.csr.indices.shape[0] - 1)]
+        # isolated nodes sample themselves
+        flat = np.where(deg[:, None] == 0, nodes[:, None], flat)
+        return flat.astype(np.int32)
+
+    def sample(self, seeds: np.ndarray) -> MiniBatch:
+        """Sample an L-hop block structure rooted at ``seeds``.
+
+        Layer L-1 (closest to seeds) uses fanouts[-1]; the frontier expands
+        backwards so ``blocks[0]`` consumes raw input features.
+        """
+        seeds = np.asarray(seeds, dtype=np.int32)
+        dst = seeds
+        layers: List[Tuple[np.ndarray, np.ndarray]] = []  # (dst, src2d)
+        for fanout in reversed(self.fanouts):
+            src = self._sample_neighbors(dst, fanout)
+            layers.append((dst, src))
+            dst = np.unique(np.concatenate([dst, src.reshape(-1)]))
+        layers.reverse()
+
+        input_nodes = dst  # frontier after the last expansion
+        lut = {int(n): i for i, n in enumerate(input_nodes)}
+        blocks: List[SampledBlock] = []
+        edge_src: List[np.ndarray] = []
+        edge_dst: List[np.ndarray] = []
+        layer_sizes = [int(input_nodes.shape[0])]
+        for (d, s2d) in layers:
+            fanout = s2d.shape[1]
+            blocks.append(SampledBlock(dst_nodes=d, src_nodes=s2d.reshape(-1),
+                                       fanout=fanout))
+            edge_src.append(np.array([lut[int(x)] for x in s2d.reshape(-1)],
+                                     dtype=np.int32))
+            # destinations renumbered into input_nodes order as well (they are
+            # guaranteed present: every dst was added to the frontier)
+            edge_dst.append(np.array([lut[int(x)] for x in np.repeat(d, fanout)],
+                                     dtype=np.int32))
+            layer_sizes.append(int(d.shape[0]))
+        return MiniBatch(blocks=blocks, seeds=seeds, input_nodes=input_nodes,
+                         edge_src=edge_src, edge_dst=edge_dst,
+                         layer_sizes=layer_sizes)
+
+    def batches(self, batch_nodes: int, num_batches: int):
+        """Yield minibatches over random seed draws (training stream)."""
+        n = self.g.num_nodes
+        for _ in range(num_batches):
+            seeds = self.rng.choice(n, size=batch_nodes, replace=n < batch_nodes)
+            yield self.sample(seeds.astype(np.int32))
+
+
+def static_block_shapes(batch_nodes: int, fanouts: Sequence[int],
+                        feat_dim: int) -> dict:
+    """Worst-case static shapes for a sampled minibatch (for dry-run specs).
+
+    With replacement sampling, layer sizes are exact products; unique-ing can
+    only shrink them, so the product bound is the static capacity.
+    """
+    sizes = [batch_nodes]
+    for f in reversed(list(fanouts)):
+        sizes.append(sizes[-1] * f)
+    sizes.reverse()  # sizes[0] = input frontier capacity
+    fl = list(fanouts)
+    return {
+        "input_nodes": sizes[0],
+        "layer_sizes": sizes,
+        "feat": (sizes[0], feat_dim),
+        "edges_per_layer": [sizes[i + 1] * fl[i] for i in range(len(fl))],
+    }

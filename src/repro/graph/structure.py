@@ -1,0 +1,164 @@
+"""Graph data structures.
+
+The framework's canonical graph representation is a static-shape COO edge list
+(``edge_index``) plus optional CSR views.  Static shapes are mandatory for
+pjit/shard_map lowering, so every constructor can pad the edge list to a fixed
+capacity with sentinel self-loops on a designated "ghost" node whose weight is
+zero (masked edges contribute nothing to ``segment_sum``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A single (possibly padded) graph.
+
+    Attributes:
+      src: (E,) int32 source node ids.
+      dst: (E,) int32 destination node ids.  Message passing flows src -> dst.
+      num_nodes: static node count (includes padding nodes if any).
+      edge_mask: (E,) bool, False for padding edges.  None means all-valid.
+      edge_weight: (E,) float32 optional (e.g. sym-normalized GCN coefficients).
+      node_feat: (N, d) float32 optional features.
+      labels: (N,) int32 optional node labels.
+      train_mask: (N,) bool optional.
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    num_nodes: int
+    edge_mask: Optional[np.ndarray] = None
+    edge_weight: Optional[np.ndarray] = None
+    node_feat: Optional[np.ndarray] = None
+    labels: Optional[np.ndarray] = None
+    train_mask: Optional[np.ndarray] = None
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def num_valid_edges(self) -> int:
+        if self.edge_mask is None:
+            return self.num_edges
+        return int(self.edge_mask.sum())
+
+    # ---------------------------------------------------------------- views
+    def csr(self) -> "CSR":
+        """Destination-major CSR view (rows = destinations, cols = sources).
+
+        Mirrors the adjacency-matrix-row view the paper's LSH reordering uses:
+        row v lists the in-neighbors N(v) aggregated into v.
+        """
+        order = np.argsort(self.dst, kind="stable")
+        src = self.src[order]
+        dst = self.dst[order]
+        if self.edge_mask is not None:
+            keep = self.edge_mask[order]
+            src, dst = src[keep], dst[keep]
+        indptr = np.zeros(self.num_nodes + 1, dtype=np.int64)
+        np.add.at(indptr, dst + 1, 1)
+        indptr = np.cumsum(indptr)
+        return CSR(indptr=indptr, indices=src.astype(np.int32), num_nodes=self.num_nodes)
+
+    def in_degrees(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        if self.edge_mask is not None:
+            np.add.at(deg, self.dst[self.edge_mask], 1)
+        else:
+            np.add.at(deg, self.dst, 1)
+        return deg
+
+    def out_degrees(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        if self.edge_mask is not None:
+            np.add.at(deg, self.src[self.edge_mask], 1)
+        else:
+            np.add.at(deg, self.src, 1)
+        return deg
+
+    # ------------------------------------------------------------- rewrites
+    def permute(self, perm: np.ndarray) -> "Graph":
+        """Relabel nodes: node i becomes position ``inv[i]`` in the new order.
+
+        ``perm`` is the execution order: ``perm[k]`` = old id of the node that
+        runs k-th.  The graph structure is unchanged (paper §IV-A: "reordering
+        does not change the graph structure but only the execution order").
+        """
+        assert perm.shape[0] == self.num_nodes
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(self.num_nodes, dtype=perm.dtype)
+        remap = lambda a: inv[a].astype(np.int32) if a is not None else None
+        return dataclasses.replace(
+            self,
+            src=remap(self.src),
+            dst=remap(self.dst),
+            node_feat=self.node_feat[perm] if self.node_feat is not None else None,
+            labels=self.labels[perm] if self.labels is not None else None,
+            train_mask=self.train_mask[perm] if self.train_mask is not None else None,
+        )
+
+    def with_sym_norm(self) -> "Graph":
+        """Attach GCN symmetric normalization coefficients 1/sqrt(d_u d_v)."""
+        deg = np.maximum(self.in_degrees() + 1, 1).astype(np.float64)  # +self loop
+        w = 1.0 / np.sqrt(deg[self.src] * deg[self.dst])
+        if self.edge_mask is not None:
+            w = np.where(self.edge_mask, w, 0.0)
+        return dataclasses.replace(self, edge_weight=w.astype(np.float32))
+
+    def pad_edges(self, capacity: int) -> "Graph":
+        """Pad the edge list to ``capacity`` with masked (0 -> 0) edges."""
+        e = self.num_edges
+        if e > capacity:
+            raise ValueError(f"edge count {e} exceeds capacity {capacity}")
+        pad = capacity - e
+        mk = lambda a, fill: np.concatenate([a, np.full(pad, fill, a.dtype)])
+        mask = self.edge_mask if self.edge_mask is not None else np.ones(e, bool)
+        return dataclasses.replace(
+            self,
+            src=mk(self.src, 0),
+            dst=mk(self.dst, 0),
+            edge_mask=mk(mask, False),
+            edge_weight=mk(self.edge_weight, 0.0) if self.edge_weight is not None else None,
+        )
+
+    def validate(self) -> None:
+        assert self.src.dtype in (np.int32, np.int64)
+        assert self.src.shape == self.dst.shape
+        assert self.src.min(initial=0) >= 0 and self.src.max(initial=0) < self.num_nodes
+        assert self.dst.min(initial=0) >= 0 and self.dst.max(initial=0) < self.num_nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Destination-major compressed sparse rows."""
+
+    indptr: np.ndarray  # (N+1,)
+    indices: np.ndarray  # (E,) source ids, grouped by destination row
+    num_nodes: int
+
+    def row(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+def from_dense(adj: np.ndarray, **kw) -> Graph:
+    dst, src = np.nonzero(adj)  # row = destination (adjacency row lists in-neighbors)
+    return Graph(src=src.astype(np.int32), dst=dst.astype(np.int32),
+                 num_nodes=adj.shape[0], **kw)
+
+
+def to_dense(g: Graph) -> np.ndarray:
+    adj = np.zeros((g.num_nodes, g.num_nodes), dtype=np.float32)
+    w = g.edge_weight if g.edge_weight is not None else np.ones(g.num_edges, np.float32)
+    if g.edge_mask is not None:
+        w = np.where(g.edge_mask, w, 0.0)
+    np.add.at(adj, (g.dst, g.src), w)
+    return adj

@@ -1,0 +1,2 @@
+from . import ref
+from .ops import spmm, spmm_ref, embedding_bag, decode_attention, sddmm

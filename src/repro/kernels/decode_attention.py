@@ -1,0 +1,87 @@
+"""Flash-decode attention Pallas kernel (one query vs long KV, online LSE).
+
+Serving hot path for the ``decode_32k`` / ``long_500k`` cells: a single new
+token attends to an S-long KV cache.  The kernel tiles KV on the sequence
+axis and keeps a running (max, denominator, accumulator) in VMEM scratch —
+the classic online-softmax recurrence (FlashDecoding), so HBM traffic is one
+pass over K and V regardless of S, and the accumulator never spills.
+
+Grid = (B, H, S/bs) with the KV-block axis innermost; cache_len masking via
+scalar prefetch.  The same recurrence merges ACROSS devices in
+dist/collectives.py (sequence-sharded KV + LSE merge) — kernel-level and
+mesh-level splits compose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bs: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                    # (d,)
+    k = k_ref[0, :, 0]                                 # (bs, d)
+    v = v_ref[0, :, 0]
+    scores = (k @ q).astype(jnp.float32) * scale       # (bs,)
+    pos = s * bs + jax.lax.iota(jnp.int32, bs)
+    scores = jnp.where(pos < len_ref[b], scores, -jnp.inf)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    # guard: all-masked block keeps m at -inf; exp(-inf - -inf) -> use where
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m_new), 0.0)  # (bs,)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + (p.astype(v.dtype) @ v
+                                           ).astype(jnp.float32)
+    m_ref[0] = m_new
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: jax.Array, *, bs: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, d); k/v: (B, S, H, d) with S % bs == 0; cache_len: (B,).
+    Returns (B, H, d) = softmax(q k^T / sqrt(d)) v over valid positions."""
+    B, H, d = q.shape
+    S = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, h, s, ln: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b, h, s, ln: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b, h, s, ln: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, h, s, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((d,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
+        interpret=interpret,
+    )(cache_len, q, k, v)

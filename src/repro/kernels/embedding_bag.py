@@ -1,0 +1,56 @@
+"""EmbeddingBag Pallas kernel: fused gather + segment-sum over a huge table.
+
+The recsys hot path (taxonomy §RecSys): bag b sums table rows for its ids.
+Layout contract (ops.py enforces): ``bag_ids`` sorted ascending and every bag
+non-empty on the padded id stream (padding ids point at row 0 with weight 0),
+so output blocks are revisited consecutively and never round-trip to HBM.
+
+Scalar prefetch carries both the row ids (x-tile gather index) and the bag
+ids (output index + init predicate).  One table row moves HBM->VMEM per grid
+step; a production variant would widen to multi-row DMA per step, which
+changes BlockSpec shapes only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, bags_ref, wgt_ref, row_ref, o_ref):
+    i = pl.program_id(0)
+    is_first = jnp.where(i == 0, True, bags_ref[jnp.maximum(i - 1, 0)]
+                         != bags_ref[i])
+
+    @pl.when(is_first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += row_ref[...] * wgt_ref[i]
+
+
+@functools.partial(jax.jit, static_argnames=("num_bags", "interpret"))
+def embedding_bag(ids: jax.Array, bag_ids: jax.Array, weights: jax.Array,
+                  table: jax.Array, *, num_bags: int,
+                  interpret: bool = False) -> jax.Array:
+    """ids/bag_ids/weights: (L,); table: (V, d), d multiple of 128.
+    Returns (num_bags, d) weighted sums."""
+    L = ids.shape[0]
+    d = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids, bags, wgt: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids, bags, wgt: (bags[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_bags, d), table.dtype),
+        interpret=interpret,
+    )(ids, bag_ids, weights.astype(table.dtype), table)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_blockell_ref(block_cols: jax.Array, blocks: jax.Array,
+                      x: jax.Array, bm: int, bk: int) -> jax.Array:
+    """Dense reference: reassemble A and multiply."""
+    R, W = block_cols.shape
+    C = x.shape[0] // bk
+    d = x.shape[1]
+    xb = x.reshape(C, bk, d)
+    safe = jnp.maximum(block_cols, 0)
+    tiles = xb[safe]                                     # (R, W, bk, d)
+    tiles = jnp.where((block_cols >= 0)[:, :, None, None], tiles, 0.0)
+    y = jnp.einsum("rwmk,rwkd->rmd", blocks, tiles)
+    return y.reshape(R * bm, d).astype(x.dtype)
+
+
+def spmm_edges_ref(src: jax.Array, dst: jax.Array, w: jax.Array,
+                   x: jax.Array, num_nodes: int) -> jax.Array:
+    """Edge-list (COO) reference: y[v] = sum_u w_uv x[u]."""
+    return jax.ops.segment_sum(x[src] * w[:, None], dst,
+                               num_segments=num_nodes)
+
+
+def embedding_bag_ref(ids: jax.Array, bag_ids: jax.Array, weights: jax.Array,
+                      table: jax.Array, num_bags: int) -> jax.Array:
+    rows = table[ids] * weights[:, None].astype(table.dtype)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=num_bags)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache_len: jax.Array) -> jax.Array:
+    """q: (B,H,d); k/v: (B,S,H,d); masked softmax in fp32."""
+    B, S, H, d = k.shape
+    scores = jnp.einsum("bhd,bshd->bhs", q, k).astype(jnp.float32)
+    scores = scores / (d ** 0.5)
+    valid = jnp.arange(S)[None, :] < cache_len[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs.astype(v.dtype), v).astype(q.dtype)
+
+
+def sddmm_ref(src: jax.Array, dst: jax.Array, q: jax.Array, k: jax.Array
+              ) -> jax.Array:
+    """Per-edge dot products: s_e = <q[src_e], k[dst_e]>."""
+    return jnp.sum(q[src] * k[dst], axis=-1)

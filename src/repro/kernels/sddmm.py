@@ -1,0 +1,64 @@
+"""SDDMM Pallas kernel: per-edge dot products (GAT edge scores).
+
+s_e = <Q[src_e], K[dst_e]>  — the sampled dense-dense matmul at masked
+positions (taxonomy §B.11), the first stage of the SDDMM -> edge-softmax ->
+SpMM pipeline GAT executes.  Edges are processed in blocks; the two row
+gathers use scalar prefetch, accumulation happens in VREGs, one (eb,) score
+block is written per grid step.
+
+Layout contract (ops.py enforces): edge count padded to a multiple of eb;
+gathers are per-edge rows (production variant: sort edges by src block and
+batch the row DMAs — same BlockSpec change as embedding_bag).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_ref, dst_ref, q_ref, k_ref, o_ref, *, eb: int):
+    i = pl.program_id(0)
+    # q_ref/k_ref hold the gathered (eb, d) row blocks for this edge block
+    prod = q_ref[...] * k_ref[...]
+    o_ref[...] = jnp.sum(prod, axis=1, keepdims=True).T  # (1, eb)
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "interpret"))
+def sddmm(src: jax.Array, dst: jax.Array, q: jax.Array, k: jax.Array,
+          *, eb: int = 256, interpret: bool = False) -> jax.Array:
+    """src/dst: (E,) int32 with E % eb == 0; q: (N, d); k: (M, d), d % 128
+    == 0 (ops.py pads).  Returns (E,) scores."""
+    E = src.shape[0]
+    d = q.shape[1]
+
+    def q_index(i, src, dst):
+        return (src[i], 0)
+
+    def k_index(i, src, dst):
+        return (dst[i], 0)
+
+    # one edge per inner step keeps the gather simple; grid = E with (1, d)
+    # row blocks; scores written as (1, 1) cells of the (E, 1) output
+    def kernel(src_ref, dst_ref, q_ref, k_ref, o_ref):
+        o_ref[0, 0] = jnp.sum(q_ref[0] * k_ref[0])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(E,),
+        in_specs=[
+            pl.BlockSpec((1, d), q_index),
+            pl.BlockSpec((1, d), k_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, src, dst: (i, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, 1), q.dtype),
+        interpret=interpret,
+    )(src, dst, q, k)
+    return out[:, 0]

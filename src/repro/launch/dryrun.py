@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile EVERY
+(architecture x input shape) cell on the single-pod (16,16) mesh AND the
+multi-pod (2,16,16) mesh, print memory_analysis / cost_analysis, and dump
+the roofline terms consumed by EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gcn-cora --shape molecule
+  PYTHONPATH=src python -m repro.launch.dryrun --single-pod-only --json out.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from .mesh import make_production_mesh
+from ..configs import get, all_archs
+
+
+def lower_cell(bundle, spec, shape: str, mesh, compile_: bool = True):
+    """Lower (and optionally compile) one cell; returns a result dict."""
+    t0 = time.time()
+    state = bundle.abstract_state(shape)
+    inputs = bundle.input_specs(shape)
+    fn = bundle.step_fn(shape)
+    arg_sh, out_sh = bundle.shardings(mesh, shape)
+    if state[1] is not None:       # train: (params, opt, batch)
+        args = (state[0], state[1], inputs)
+        donate = (0, 1)            # params/opt update in place
+    else:                          # serve: (params, batch)
+        args = (state[0], inputs)
+        # decode donates its KV caches (batch arg) for in-place update
+        donate = (1,) if "caches" in inputs else ()
+    with mesh:
+        kw = dict(in_shardings=arg_sh, donate_argnums=donate)
+        if out_sh is not None:
+            kw["out_shardings"] = out_sh
+        jitted = jax.jit(fn, **kw)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        result = {"arch": spec.name, "shape": shape,
+                  "mesh": "x".join(map(str, mesh.devices.shape)),
+                  "lower_s": round(t_lower, 1)}
+        if compile_:
+            compiled = lowered.compile()
+            result["compile_s"] = round(time.time() - t0 - t_lower, 1)
+            ma = compiled.memory_analysis()
+            result["memory"] = {
+                "argument_gb_per_device": ma.argument_size_in_bytes / 1e9,
+                "output_gb_per_device": ma.output_size_in_bytes / 1e9,
+                "temp_gb_per_device": ma.temp_size_in_bytes / 1e9,
+                "peak_gb_per_device": (ma.argument_size_in_bytes
+                                       + max(ma.output_size_in_bytes
+                                             - ma.alias_size_in_bytes, 0)
+                                       + ma.temp_size_in_bytes) / 1e9,
+            }
+            ca = compiled.cost_analysis() or {}
+            result["cost"] = {"flops_per_device": ca.get("flops", 0.0),
+                              "bytes_per_device": ca.get("bytes accessed",
+                                                         0.0)}
+            return result, lowered, compiled
+        return result, lowered, None
+
+
+def run(arch_names, shapes_filter, multi_pod_too=True, compile_=True,
+        out_json=None, log=print):
+    results = []
+    failures = []
+    meshes = [("1-pod(16x16)", make_production_mesh(multi_pod=False))]
+    if multi_pod_too:
+        meshes.append(("2-pod(2x16x16)", make_production_mesh(multi_pod=True)))
+    for name in arch_names:
+        spec = get(name)
+        bundle = spec.bundle()
+        shapes = [s for s in spec.shapes
+                  if shapes_filter is None or s in shapes_filter]
+        for shape in shapes:
+            for mesh_name, mesh in meshes:
+                tag = f"{name:28s} {shape:14s} {mesh_name}"
+                try:
+                    res, _, _ = lower_cell(bundle, spec, shape, mesh,
+                                           compile_=compile_)
+                    res["mesh_name"] = mesh_name
+                    mem = res.get("memory", {})
+                    log(f"OK   {tag}  lower={res['lower_s']}s "
+                        f"compile={res.get('compile_s', '-')}s  "
+                        f"peak={mem.get('peak_gb_per_device', 0):.2f}GB/dev "
+                        f"flops/dev={res.get('cost', {}).get('flops_per_device', 0):.3g}")
+                    if mem.get("peak_gb_per_device", 0) > 16.0:
+                        log(f"WARN {tag}  exceeds v5e 16GB HBM!")
+                        res["hbm_overflow"] = True
+                    results.append(res)
+                except Exception as e:
+                    log(f"FAIL {tag}  {type(e).__name__}: {e}")
+                    failures.append({"arch": name, "shape": shape,
+                                     "mesh": mesh_name, "error": str(e),
+                                     "traceback": traceback.format_exc()})
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+        log(f"wrote {out_json}")
+    log(f"\n{len(results)} cells OK, {len(failures)} failed")
+    return results, failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    archs = args.arch or list(all_archs())
+    _, failures = run(archs, args.shape,
+                      multi_pod_too=not args.single_pod_only,
+                      compile_=not args.no_compile, out_json=args.json)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline baseline for all 40 cells (single-pod, per the brief).
+
+  PYTHONPATH=src python -m repro.launch.roofline_run --json roofline.json
+"""
+import argparse
+import json
+import traceback
+
+from .mesh import make_production_mesh
+from ..configs import get, all_archs
+from ..roofline.analysis import analyze_cell, markdown_row, MD_HEADER
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args(argv)
+    mesh = make_production_mesh(multi_pod=False)
+    rows = []
+    records = []
+    archs = args.arch or list(all_archs())
+    for name in archs:
+        spec = get(name)
+        for shape in spec.shapes:
+            if args.shape and shape not in args.shape:
+                continue
+            try:
+                r = analyze_cell(name, shape, mesh, "16x16")
+                rows.append(markdown_row(r))
+                records.append({
+                    "arch": r.arch, "shape": r.shape,
+                    "flops_per_chip": r.flops_per_chip,
+                    "bytes_per_chip": r.bytes_per_chip,
+                    "coll_bytes_per_chip": r.coll_bytes_per_chip,
+                    "t_compute": r.t_compute, "t_memory": r.t_memory,
+                    "t_collective": r.t_collective, "dominant": r.dominant,
+                    "model_flops": r.model_flops_global,
+                    "useful_ratio": r.useful_ratio,
+                    "roofline_fraction": r.roofline_fraction,
+                    "peak_gb": r.peak_gb, "suggestion": r.suggestion(),
+                })
+                print(f"{name:28s} {shape:14s} dominant={r.dominant:10s} "
+                      f"frac={r.roofline_fraction:.2%} peak={r.peak_gb:.1f}GB")
+            except Exception as e:
+                print(f"FAIL {name} {shape}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(MD_HEADER + "\n" + "\n".join(rows) + "\n")
+    print(f"\n{len(records)} cells analyzed")
+
+
+if __name__ == "__main__":
+    main()

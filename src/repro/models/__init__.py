@@ -1,0 +1,11 @@
+from .gcn import gcn_init, gcn_apply, gcn_loss, make_graph_inputs
+from .gat import gat_init, gat_apply, gat_loss, edge_softmax
+from .pna import pna_init, pna_apply, pna_loss, mean_log_degree
+from .nequip import (nequip_init, nequip_apply, nequip_energy,
+                     nequip_energy_forces)
+from .sage_gin import (sage_init, sage_apply, sage_loss, sage_block_apply,
+                       gin_init, gin_apply, gin_loss)
+from .transformer import (LMConfig, lm_init, lm_forward, lm_loss, lm_prefill,
+                          lm_decode_step)
+from .recsys import (WideDeepConfig, widedeep_init, widedeep_logits,
+                     widedeep_loss, user_tower, retrieval_score)

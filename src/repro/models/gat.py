@@ -1,0 +1,99 @@
+"""GAT (Velickovic et al., arXiv:1710.10903): multi-head edge-softmax attention.
+
+Aggregation = SDDMM (edge scores) -> segment-softmax -> weighted SpMM.
+Rubik applicability (DESIGN.md §4): LSH reordering accelerates the gather
+phases (reuse distance of h_src rows); shared-set computation reuse is
+INAPPLICABLE to the attention-weighted sum (per-destination weights break
+order-invariant shared partials) — the paper's CR assumes uniform aggregators.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.layers import linear_init, linear_apply, cross_entropy
+
+
+def gat_dims(d_in: int, d_hidden: int, n_heads: int, n_classes: int,
+             n_layers: int = 2):
+    """Static layer geometry (kept OUT of the params pytree so grad works)."""
+    dims_in = [d_in] + [d_hidden * n_heads] * (n_layers - 1)
+    dims_out = [d_hidden] * (n_layers - 1) + [n_classes]
+    heads = [n_heads] * (n_layers - 1) + [1]
+    return dims_in, dims_out, heads
+
+
+def gat_init(key, d_in: int, d_hidden: int, n_heads: int, n_classes: int,
+             n_layers: int = 2, param_dtype=jnp.float32) -> Dict:
+    """Layer 0: d_in -> heads*hidden (concat); final: -> n_classes (mean)."""
+    dims_in, dims_out, heads = gat_dims(d_in, d_hidden, n_heads, n_classes,
+                                        n_layers)
+    layers = []
+    keys = jax.random.split(key, n_layers)
+    for i in range(n_layers):
+        k1, k2, k3 = jax.random.split(keys[i], 3)
+        h = heads[i]
+        layers.append({
+            "w": linear_init(k1, dims_in[i], h * dims_out[i], bias=False,
+                             param_dtype=param_dtype),
+            "a_src": (jax.random.normal(k2, (h, dims_out[i])) * 0.1
+                      ).astype(param_dtype),
+            "a_dst": (jax.random.normal(k3, (h, dims_out[i])) * 0.1
+                      ).astype(param_dtype),
+        })
+    return {"layers": layers}
+
+
+def edge_softmax(scores: jax.Array, dst: jax.Array, num_nodes: int,
+                 edge_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Numerically-stable softmax over incoming edges per destination.
+
+    scores: (E, H).  Uses segment_max / segment_sum (the SDDMM->softmax
+    pattern in kernels taxonomy §GNN).
+    """
+    if edge_mask is not None:
+        scores = jnp.where(edge_mask[:, None], scores, -jnp.inf)
+    mx = jax.ops.segment_max(scores, dst, num_segments=num_nodes)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(scores - mx[dst])
+    if edge_mask is not None:
+        ex = jnp.where(edge_mask[:, None], ex, 0.0)
+    den = jax.ops.segment_sum(ex, dst, num_segments=num_nodes)
+    return ex / jnp.maximum(den[dst], 1e-9)
+
+
+def gat_layer(p, h: jax.Array, src: jax.Array, dst: jax.Array, n_heads: int,
+              d_out: int, edge_mask=None, negative_slope: float = 0.2):
+    N = h.shape[0]
+    z = linear_apply(p["w"], h).reshape(N, n_heads, d_out)
+    s_src = jnp.einsum("nhd,hd->nh", z, p["a_src"])
+    s_dst = jnp.einsum("nhd,hd->nh", z, p["a_dst"])
+    e = jax.nn.leaky_relu(s_src[src] + s_dst[dst], negative_slope)  # SDDMM
+    alpha = edge_softmax(e, dst, N, edge_mask)                      # (E, H)
+    msgs = z[src] * alpha[:, :, None]
+    out = jax.ops.segment_sum(msgs, dst, num_segments=N)            # SpMM
+    return out  # (N, H, d_out)
+
+
+def gat_apply(params, x: jax.Array, graph: Dict[str, Any],
+              act=jax.nn.elu) -> jax.Array:
+    h = x
+    src, dst = graph["src"], graph["dst"]
+    mask = graph.get("edge_mask")
+    n_layers = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        # geometry recovered from parameter shapes (heads, d_out static)
+        n_heads, d_out = p["a_src"].shape
+        out = gat_layer(p, h, src, dst, n_heads, d_out, mask)
+        if i + 1 < n_layers:
+            h = act(out.reshape(out.shape[0], -1))  # concat heads
+        else:
+            h = out.mean(axis=1)                    # average final head
+    return h
+
+
+def gat_loss(params, x, graph, labels, mask):
+    logits = gat_apply(params, x, graph)
+    return cross_entropy(logits, labels, mask.astype(jnp.float32))

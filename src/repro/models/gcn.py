@@ -1,0 +1,77 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) with Rubik-aware aggregation.
+
+h^{l+1} = act( A_hat h^l W^l ),  A_hat = D^-1/2 (A+I) D^-1/2.
+
+Key Rubik integration: the symmetric normalization FACTORIZES into a source
+scale and a destination scale (1/sqrt(d_u) * 1/sqrt(d_v)), so the aggregation
+itself runs unweighted on pre-scaled features — which is exactly what the
+shared-set (G-C) computation-reuse plan requires (order-invariant, weightless
+reductions).  executor in {"segment", "shared", "blockell"}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.layers import linear_init, linear_apply, cross_entropy
+from ..core.aggregate import segment_aggregate, shared_aggregate, blockell_matmul
+
+
+def gcn_init(key, dims: Sequence[int], param_dtype=jnp.float32) -> Dict:
+    """dims = [d_in, hidden..., num_classes]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {"layers": [linear_init(k, dims[i], dims[i + 1],
+                                   param_dtype=param_dtype)
+                       for i, k in enumerate(keys)]}
+
+
+def _aggregate(x, graph, executor: str, plan=None, ell=None):
+    """A_hat @ x with the chosen executor; self-loop added analytically."""
+    deg = graph["deg"]                      # (N,) in-degree + 1 (self loop)
+    inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+    xs = x * inv_sqrt[:, None]              # source scaling
+    if executor == "segment":
+        agg = segment_aggregate(xs, graph["src"], graph["dst"],
+                                x.shape[0], op="sum",
+                                edge_mask=graph.get("edge_mask"))
+    elif executor == "shared":
+        agg = shared_aggregate(xs, plan, op="sum")
+    elif executor == "blockell":
+        agg = blockell_matmul(ell["block_cols"], ell["blocks"], xs,
+                              ell["bm"], ell["bk"])
+    else:
+        raise ValueError(executor)
+    agg = agg + xs                          # self loop
+    return agg * inv_sqrt[:, None]          # destination scaling
+
+
+def gcn_apply(params, x: jax.Array, graph: Dict[str, Any],
+              executor: str = "segment", plan=None, ell=None,
+              act=jax.nn.relu) -> jax.Array:
+    h = x
+    n_layers = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        h = _aggregate(h, graph, executor, plan, ell)
+        h = linear_apply(p, h)
+        if i + 1 < n_layers:
+            h = act(h)
+    return h
+
+
+def gcn_loss(params, x, graph, labels, mask, executor="segment",
+             plan=None, ell=None):
+    logits = gcn_apply(params, x, graph, executor, plan, ell)
+    return cross_entropy(logits, labels, mask.astype(jnp.float32))
+
+
+def make_graph_inputs(g, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Device-ready graph dict from a numpy Graph (adds self-loop degrees)."""
+    import numpy as np
+    deg = g.in_degrees().astype(np.float32) + 1.0
+    out = {"src": jnp.asarray(g.src), "dst": jnp.asarray(g.dst),
+           "deg": jnp.asarray(deg)}
+    if g.edge_mask is not None:
+        out["edge_mask"] = jnp.asarray(g.edge_mask)
+    return out

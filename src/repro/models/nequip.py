@@ -1,0 +1,178 @@
+"""NequIP (arXiv:2101.03164): E(3)-equivariant interatomic potential, l_max=2.
+
+Implementation note (DESIGN.md §hardware-adaptation): irreducible l<=2
+features are carried in CARTESIAN tensor form —
+
+  l=0: scalars       (N, C)
+  l=1: vectors       (N, C, 3)          rotate as  v -> R v
+  l=2: traceless sym (N, C, 3, 3)       rotate as  T -> R T R^T
+
+For l<=2 this is an exact change of basis from the (2l+1) irrep vectors, and
+every tensor-product path becomes a dense einsum (MXU-friendly) instead of a
+sparse Clebsch-Gordan contraction — the eSCN-spirit simplification for TPU.
+Implemented paths (all E(3)-equivariant by construction):
+
+  0x0->0 (product), 0x1->1, 1x1->0 (dot), 1x1->1 (cross), 1x1->2 (sym outer),
+  0x2->2, 2x1->1 (contraction), 2x2->0 (Frobenius).
+
+Radial: Bessel basis (n_rbf) with polynomial cutoff envelope; per-path weights
+from a radial MLP, exactly as in the paper.  Message passing aggregates with
+segment_sum (sum aggregator -> Rubik reordering applies; per-edge radial
+weights make shared-set CR inapplicable, as noted in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.layers import mlp_init, mlp_apply, linear_init, linear_apply
+
+
+# ------------------------------------------------------------------ radial
+def bessel_basis(r: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """sin(n pi r / rc) / r basis (NequIP eq. 8), shape (E, n_rbf)."""
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    rs = jnp.maximum(r, 1e-9)[:, None]
+    return (jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * rs / cutoff) / rs)
+
+
+def poly_cutoff(r: jax.Array, cutoff: float, p: int = 6) -> jax.Array:
+    """Smooth polynomial envelope, 1 at r=0, 0 at r>=cutoff (NequIP eq. 9)."""
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2.0
+    return 1.0 + a * x ** p + b * x ** (p + 1) + c * x ** (p + 2)
+
+
+def _traceless_sym(outer: jax.Array) -> jax.Array:
+    """Project (..., 3, 3) onto traceless symmetric part (the l=2 irrep)."""
+    sym = 0.5 * (outer + jnp.swapaxes(outer, -1, -2))
+    tr = jnp.trace(sym, axis1=-2, axis2=-1)[..., None, None]
+    eye = jnp.eye(3, dtype=outer.dtype)
+    return sym - tr * eye / 3.0
+
+
+# ------------------------------------------------------------------- model
+N_PATHS = 10  # radial-weighted tensor-product paths per layer
+
+
+def nequip_init(key, n_species: int = 16, channels: int = 32,
+                n_layers: int = 5, n_rbf: int = 8, cutoff: float = 5.0,
+                radial_hidden: int = 64, param_dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(key, n_layers + 3)
+    layers = []
+    for i in range(n_layers):
+        k1, k2, k3, k4, k5 = jax.random.split(keys[i], 5)
+        layers.append({
+            "radial": mlp_init(k1, [n_rbf, radial_hidden, N_PATHS * channels],
+                               param_dtype=param_dtype),
+            "self0": linear_init(k2, channels, channels, param_dtype=param_dtype),
+            "self1": (jax.random.normal(k3, (channels, channels))
+                      / math.sqrt(channels)).astype(param_dtype),
+            "self2": (jax.random.normal(k4, (channels, channels))
+                      / math.sqrt(channels)).astype(param_dtype),
+            "gate": linear_init(k5, channels, 2 * channels,
+                                param_dtype=param_dtype),
+        })
+    return {
+        "embed": (jax.random.normal(keys[-3], (n_species, channels)) * 0.5
+                  ).astype(param_dtype),
+        "layers": layers,
+        "readout": mlp_init(keys[-2], [channels, radial_hidden, 1],
+                            param_dtype=param_dtype),
+    }
+
+
+def nequip_layer(p, feats: Tuple, pos_diff, rbf_w, src, dst, num_nodes):
+    """One interaction block.  feats = (s, v, T)."""
+    s, v, T = feats
+    C = s.shape[-1]
+    r = jnp.linalg.norm(pos_diff, axis=-1)
+    dirn = pos_diff / jnp.maximum(r, 1e-9)[:, None]           # (E, 3)
+    w = mlp_apply(p["radial"], rbf_w, act=jax.nn.silu)        # (E, 10*C)
+    w = w.reshape(-1, N_PATHS, C)
+
+    ss, sv, sT = s[src], v[src], T[src]                        # gathers
+    d1 = dirn[:, None, :]                                      # (E,1,3)
+    Y2 = _traceless_sym(d1[..., :, None] * d1[..., None, :])   # (E,1,3,3)
+
+    # --- messages per output irrep (each path radial-gated) ---
+    m_s = (w[:, 0] * ss
+           + w[:, 1] * jnp.einsum("eci,ei->ec", sv, dirn)             # 1x1->0
+           + w[:, 2] * jnp.einsum("ecij,eij->ec", sT, Y2[:, 0]))      # 2x2->0
+    m_v = (w[:, 3, :, None] * sv
+           + w[:, 4, :, None] * ss[..., None] * d1                    # 0x1->1
+           + w[:, 5, :, None] * jnp.cross(sv, jnp.broadcast_to(
+               d1, sv.shape))                                         # 1x1->1
+           + w[:, 6, :, None] * jnp.einsum("ecij,ej->eci", sT, dirn)) # 2x1->1
+    m_T = (w[:, 7, :, None, None] * sT
+           + w[:, 8, :, None, None] * ss[..., None, None] * Y2        # 0x2->2
+           + w[:, 9, :, None, None] * _traceless_sym(
+               sv[..., :, None] * d1[..., None, :]))                  # 1x1->2
+
+    a_s = jax.ops.segment_sum(m_s, dst, num_segments=num_nodes)
+    a_v = jax.ops.segment_sum(m_v, dst, num_segments=num_nodes)
+    a_T = jax.ops.segment_sum(m_T, dst, num_segments=num_nodes)
+
+    # --- self-interaction (channel mixing, per-l) + gated nonlinearity ---
+    s_new = s + linear_apply(p["self0"], a_s)
+    v_new = v + jnp.einsum("ncx,cd->ndx", a_v, p["self1"].astype(a_v.dtype))
+    T_new = T + jnp.einsum("ncxy,cd->ndxy", a_T, p["self2"].astype(a_T.dtype))
+    gates = linear_apply(p["gate"], jax.nn.silu(s_new))
+    g_v, g_T = jnp.split(jax.nn.sigmoid(gates), 2, axis=-1)
+    return (jax.nn.silu(s_new), v_new * g_v[..., None],
+            T_new * g_T[..., None, None])
+
+
+def nequip_apply(params, species: jax.Array, pos: jax.Array,
+                 src: jax.Array, dst: jax.Array,
+                 edge_mask=None, node_mask=None,
+                 cutoff: float = 5.0) -> jax.Array:
+    """Per-graph invariant energy.  species: (N,) ints; pos: (N, 3).
+
+    Geometry (channels, n_rbf) is recovered from parameter shapes; cutoff is
+    a static argument — the params pytree stays float-only for grad.
+    """
+    C = params["embed"].shape[1]
+    n_rbf = params["layers"][0]["radial"][0]["w"].shape[0]
+    N = species.shape[0]
+    s = params["embed"][species].astype(pos.dtype)
+    v = jnp.zeros((N, C, 3), pos.dtype)
+    T = jnp.zeros((N, C, 3, 3), pos.dtype)
+
+    pos_diff = pos[src] - pos[dst]
+    r = jnp.linalg.norm(pos_diff, axis=-1)
+    rbf = bessel_basis(r, n_rbf, cutoff) * poly_cutoff(r, cutoff)[:, None]
+    if edge_mask is not None:
+        rbf = jnp.where(edge_mask[:, None], rbf, 0.0)
+
+    feats = (s, v, T)
+    for p in params["layers"]:
+        feats = nequip_layer(p, feats, pos_diff, rbf, src, dst, N)
+    energy_per_node = mlp_apply(params["readout"], feats[0],
+                                act=jax.nn.silu)[:, 0]
+    if node_mask is not None:
+        energy_per_node = energy_per_node * node_mask
+    return energy_per_node
+
+
+def nequip_energy(params, species, pos, src, dst, edge_mask=None,
+                  node_mask=None, graph_ids=None, num_graphs: int = 1,
+                  cutoff: float = 5.0):
+    e = nequip_apply(params, species, pos, src, dst, edge_mask, node_mask,
+                     cutoff=cutoff)
+    if graph_ids is not None:
+        return jax.ops.segment_sum(e, graph_ids, num_segments=num_graphs)
+    return jnp.sum(e)[None]
+
+
+def nequip_energy_forces(params, species, pos, src, dst, **kw):
+    """Forces = -dE/dpos (the equivariant output)."""
+    def etot(pp):
+        return jnp.sum(nequip_energy(params, species, pp, src, dst, **kw))
+    e, g = jax.value_and_grad(etot)(pos)
+    return e, -g

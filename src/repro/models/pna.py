@@ -1,0 +1,90 @@
+"""PNA — Principal Neighbourhood Aggregation (arXiv:2004.05718).
+
+Four aggregators (mean, max, min, std) x three degree scalers (identity,
+amplification, attenuation) -> 12-way concatenated tower -> linear.
+std uses sum/sum-of-squares, which stays order-invariant, so Rubik's
+shared-set reuse applies to the sum-typed lanes (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.layers import linear_init, linear_apply, cross_entropy
+from ..core.aggregate import segment_aggregate
+
+
+AGGREGATORS = ("mean", "max", "min", "std")
+SCALERS = ("identity", "amplification", "attenuation")
+
+
+def pna_init(key, d_in: int, d_hidden: int, n_layers: int, n_classes: int,
+             param_dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(key, n_layers + 1)
+    layers = []
+    d_prev = d_in
+    for i in range(n_layers):
+        mult = len(AGGREGATORS) * len(SCALERS)
+        layers.append({
+            "pre": linear_init(keys[i], d_prev, d_hidden,
+                               param_dtype=param_dtype),
+            "post": linear_init(jax.random.fold_in(keys[i], 1),
+                                d_hidden * mult + d_hidden, d_hidden,
+                                param_dtype=param_dtype),
+        })
+        d_prev = d_hidden
+    return {"layers": layers,
+            "head": linear_init(keys[-1], d_prev, n_classes,
+                                param_dtype=param_dtype)}
+
+
+def pna_aggregate(h: jax.Array, src: jax.Array, dst: jax.Array,
+                  num_nodes: int, mean_log_deg: float,
+                  edge_mask=None) -> jax.Array:
+    """(N, d) -> (N, 12*d) PNA aggregation."""
+    ones = (edge_mask.astype(h.dtype) if edge_mask is not None
+            else jnp.ones(src.shape[0], h.dtype))
+    deg = jax.ops.segment_sum(ones, dst, num_segments=num_nodes)
+    mean = segment_aggregate(h, src, dst, num_nodes, "mean", edge_mask=edge_mask)
+    mx = segment_aggregate(h, src, dst, num_nodes, "max", edge_mask=edge_mask)
+    mn = segment_aggregate(h, src, dst, num_nodes, "min", edge_mask=edge_mask)
+    sq = segment_aggregate(h * h, src, dst, num_nodes, "mean",
+                           edge_mask=edge_mask)
+    std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-5)
+    aggs = [mean, mx, mn, std]
+
+    logd = jnp.log(deg + 1.0)
+    s_amp = (logd / mean_log_deg)[:, None]
+    s_att = (mean_log_deg / jnp.maximum(logd, 1e-5))[:, None]
+    out = []
+    for a in aggs:
+        out.extend([a, a * s_amp, a * s_att])
+    return jnp.concatenate(out, axis=-1)
+
+
+def pna_apply(params, x: jax.Array, graph: Dict[str, Any],
+              act=jax.nn.relu) -> jax.Array:
+    src, dst = graph["src"], graph["dst"]
+    mask = graph.get("edge_mask")
+    mean_log_deg = graph["mean_log_deg"]
+    h = x
+    N = x.shape[0]
+    for p in params["layers"]:
+        z = act(linear_apply(p["pre"], h))
+        agg = pna_aggregate(z, src, dst, N, mean_log_deg, mask)
+        h = act(linear_apply(p["post"], jnp.concatenate([z, agg], axis=-1)))
+    return linear_apply(params["head"], h)
+
+
+def pna_loss(params, x, graph, labels, mask):
+    logits = pna_apply(params, x, graph)
+    return cross_entropy(logits, labels, mask.astype(jnp.float32))
+
+
+def mean_log_degree(g) -> float:
+    import numpy as np
+    deg = g.in_degrees()
+    return float(np.log(deg + 1.0).mean()) or 1.0

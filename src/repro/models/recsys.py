@@ -1,0 +1,113 @@
+"""Wide & Deep (arXiv:1606.07792): 40 sparse fields, embed 32, MLP 1024-512-256.
+
+Wide part: linear over sparse ids (one weight per table row — an embed_dim=1
+EmbeddingBag) + dense features.  Deep part: concat(field embeddings, dense)
+-> MLP -> logit.  interaction=concat per assigned config.
+
+The embedding LOOKUP is the hot path (taxonomy §RecSys): fused single table
+with per-field row offsets, implemented as take + segment_sum (EmbeddingBag),
+row-shardable on the ``model`` mesh axis.  ``retrieval_score`` scores one
+query against N candidates as a batched dot (no loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.layers import mlp_init, mlp_apply, linear_init, linear_apply
+from ..nn.embedding import embedding_bag_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    name: str = "wide-deep"
+    n_sparse: int = 40
+    rows_per_field: int = 100_000     # fused table = n_sparse * rows_per_field
+    embed_dim: int = 32
+    n_dense: int = 13
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256)
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_sparse * self.rows_per_field
+
+    def param_count(self) -> int:
+        deep_in = self.n_sparse * self.embed_dim + self.n_dense
+        dims = (deep_in,) + self.mlp_dims + (1,)
+        mlp = sum(dims[i] * dims[i + 1] + dims[i + 1]
+                  for i in range(len(dims) - 1))
+        return self.total_rows * (self.embed_dim + 1) + mlp + self.n_dense + 1
+
+
+def widedeep_init(key, cfg: WideDeepConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        "table": (jax.random.normal(k1, (cfg.total_rows, cfg.embed_dim))
+                  * (1.0 / math.sqrt(cfg.embed_dim))).astype(cfg.param_dtype),
+        "wide": (jax.random.normal(k2, (cfg.total_rows,)) * 0.01
+                 ).astype(cfg.param_dtype),
+        "wide_dense": linear_init(k3, cfg.n_dense, 1,
+                                  param_dtype=cfg.param_dtype),
+        "deep": mlp_init(k4, [deep_in, *cfg.mlp_dims, 1],
+                         param_dtype=cfg.param_dtype),
+    }
+
+
+def widedeep_logits(params, sparse_ids: jax.Array, dense: jax.Array,
+                    cfg: WideDeepConfig) -> jax.Array:
+    """sparse_ids: (B, F) per-field LOCAL ids; dense: (B, n_dense)."""
+    B, F = sparse_ids.shape
+    offsets = (jnp.arange(F, dtype=sparse_ids.dtype) * cfg.rows_per_field)
+    flat = (sparse_ids + offsets[None, :]).reshape(-1)           # (B*F,)
+    bag = jnp.repeat(jnp.arange(B), F)
+
+    # deep: per-field embeddings concat (interaction=concat)
+    emb = params["table"].astype(cfg.dtype)[flat].reshape(B, F * cfg.embed_dim)
+    deep_in = jnp.concatenate([emb, dense.astype(cfg.dtype)], axis=-1)
+    deep = mlp_apply(params["deep"], deep_in, act=jax.nn.relu)[:, 0]
+
+    # wide: EmbeddingBag with embed_dim=1 over the same ids + dense linear
+    wide_sparse = embedding_bag_apply(
+        {"table": params["wide"][:, None]}, flat, bag, B, mode="sum",
+        dtype=cfg.dtype)[:, 0]
+    wide = wide_sparse + linear_apply(params["wide_dense"],
+                                      dense.astype(cfg.dtype))[:, 0]
+    return deep + wide
+
+
+def widedeep_loss(params, sparse_ids, dense, labels, cfg: WideDeepConfig):
+    logits = widedeep_logits(params, sparse_ids, dense, cfg)
+    labels = labels.astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    # numerically-stable BCE-with-logits
+    return jnp.mean(jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# ------------------------------------------------------------- retrieval
+def user_tower(params, sparse_ids, dense, cfg: WideDeepConfig) -> jax.Array:
+    """(B, d_repr) user representation = last MLP hidden layer."""
+    B, F = sparse_ids.shape
+    offsets = (jnp.arange(F, dtype=sparse_ids.dtype) * cfg.rows_per_field)
+    flat = (sparse_ids + offsets[None, :]).reshape(-1)
+    emb = params["table"].astype(cfg.dtype)[flat].reshape(B, F * cfg.embed_dim)
+    deep_in = jnp.concatenate([emb, dense.astype(cfg.dtype)], axis=-1)
+    h = deep_in
+    for p in params["deep"][:-1]:
+        h = jax.nn.relu(linear_apply(p, h))
+    return h                                                    # (B, 256)
+
+
+def retrieval_score(params, sparse_ids, dense, candidate_emb: jax.Array,
+                    cfg: WideDeepConfig) -> jax.Array:
+    """Score 1 query against N candidates: (1,F),(1,D),(N,256) -> (N,).
+
+    Batched dot, not a loop (taxonomy §RecSys retrieval_cand)."""
+    q = user_tower(params, sparse_ids, dense, cfg)              # (1, 256)
+    return (candidate_emb.astype(cfg.dtype) @ q[0])             # (N,)

@@ -1,0 +1,117 @@
+"""GraphSAGE (arXiv:1706.02216) and GIN (arXiv:1810.00826) — the paper's two
+evaluation models (§V-A, PyG defaults: SAGE 2x sageConv h=256; GIN 5 conv +
+2 linear h=128).
+
+Both expose an ``executor`` switch so the Rubik scheduling strategies
+(Index / LR / LR&CR) run through identical model code — the Fig. 8/9
+benchmarks flip only the plan.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.layers import linear_init, linear_apply, mlp_init, mlp_apply, cross_entropy
+from ..core.aggregate import segment_aggregate, shared_aggregate
+
+
+def _agg(h, graph, op, executor="segment", plan=None):
+    if executor == "shared" and plan is not None:
+        return shared_aggregate(h, plan, op=op)
+    return segment_aggregate(h, graph["src"], graph["dst"], h.shape[0], op=op,
+                             edge_mask=graph.get("edge_mask"))
+
+
+# ----------------------------------------------------------------- SAGE
+def sage_init(key, dims: Sequence[int], param_dtype=jnp.float32) -> Dict:
+    """dims = [d_in, hidden..., out]; each layer: W @ concat(h, mean_N(h))."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {"layers": [linear_init(k, 2 * dims[i], dims[i + 1],
+                                   param_dtype=param_dtype)
+                       for i, k in enumerate(keys)]}
+
+
+def sage_apply(params, x, graph, executor="segment", plan=None,
+               act=jax.nn.relu):
+    h = x
+    L = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        nbr = _agg(h, graph, "mean", executor, plan)
+        h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
+        if i + 1 < L:
+            h = act(h)
+        # L2 normalize as in the paper
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h
+
+
+def sage_loss(params, x, graph, labels, mask, head=None, executor="segment",
+              plan=None):
+    h = sage_apply(params, x, graph, executor, plan)
+    logits = linear_apply(head, h) if head is not None else h
+    return cross_entropy(logits, labels, mask.astype(jnp.float32))
+
+
+def sage_block_apply(params, x, blocks, act=jax.nn.relu):
+    """Minibatch forward over sampled blocks (static-shape edge lists).
+
+    blocks: list of dicts {"src","dst","num_dst"} in input->output order;
+    x covers the input frontier.  Layer l reduces the frontier to num_dst.
+    """
+    h = x
+    L = len(params["layers"])
+    for i, (p, blk) in enumerate(zip(params["layers"], blocks)):
+        nbr = jax.ops.segment_sum(h[blk["src"]], blk["dst"],
+                                  num_segments=h.shape[0])
+        cnt = jax.ops.segment_sum(jnp.ones_like(blk["src"], h.dtype),
+                                  blk["dst"], num_segments=h.shape[0])
+        nbr = nbr / jnp.maximum(cnt, 1.0)[:, None]
+        h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
+        if i + 1 < L:
+            h = act(h)
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h
+
+
+# ------------------------------------------------------------------ GIN
+def gin_init(key, d_in: int, d_hidden: int, n_conv: int, n_classes: int,
+             param_dtype=jnp.float32) -> Dict:
+    """n_conv GINConv (2-layer MLPs) + 2 linear head layers (paper config)."""
+    keys = jax.random.split(key, n_conv + 2)
+    convs = []
+    d_prev = d_in
+    for i in range(n_conv):
+        convs.append({
+            "mlp": mlp_init(keys[i], [d_prev, d_hidden, d_hidden],
+                            param_dtype=param_dtype),
+            "eps": jnp.zeros((), param_dtype),
+        })
+        d_prev = d_hidden
+    return {"convs": convs,
+            "lin1": linear_init(keys[-2], d_hidden, d_hidden,
+                                param_dtype=param_dtype),
+            "lin2": linear_init(keys[-1], d_hidden, n_classes,
+                                param_dtype=param_dtype)}
+
+
+def gin_apply(params, x, graph, executor="segment", plan=None,
+              act=jax.nn.relu, graph_ids=None, num_graphs: Optional[int] = None,
+              node_mask=None):
+    h = x
+    for c in params["convs"]:
+        nbr = _agg(h, graph, "sum", executor, plan)
+        h = mlp_apply(c["mlp"], (1.0 + c["eps"]) * h + nbr, act=act,
+                      final_act=act)
+    if graph_ids is not None:  # graph classification readout (paper datasets)
+        if node_mask is not None:
+            h = h * node_mask[:, None]
+        h = jax.ops.segment_sum(h, graph_ids, num_segments=num_graphs)
+    h = act(linear_apply(params["lin1"], h))
+    return linear_apply(params["lin2"], h)
+
+
+def gin_loss(params, x, graph, labels, mask, executor="segment", plan=None):
+    logits = gin_apply(params, x, graph, executor, plan)
+    return cross_entropy(logits, labels, mask.astype(jnp.float32))

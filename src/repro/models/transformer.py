@@ -1,0 +1,529 @@
+"""Decoder-only LM family: dense + MoE GQA transformers (5 assigned archs).
+
+Design for multi-pod lowering:
+  * layer params are STACKED on a leading axis and the forward is a
+    ``jax.lax.scan`` -> HLO size is O(1) in depth (critical for 88-layer
+    Mistral-Large dry-runs on 512 simulated devices);
+  * MoE archs interleave via SUPERBLOCKS: each scan step runs
+    (moe_every - 1) dense layers then one MoE layer, with separate parameter
+    stacks — no dead branches, exact FLOP accounting (Llama-4 style);
+  * activations rematerialized per layer (``jax.checkpoint``);
+  * serve path: prefill returns stacked KV caches; decode consumes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.layers import rmsnorm_init, rmsnorm_apply, swiglu, cross_entropy
+from ..nn.attention import (rope_freqs, gqa_init, causal_attention,
+                            prefill_attention, decode_attention)
+from ..nn.moe import moe_init, moe_apply
+from ..dist.sharding import shard_activation, ambient_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    # MoE
+    n_experts: int = 0            # 0 = dense
+    top_k: int = 1
+    moe_every: int = 1            # one MoE layer per ``moe_every`` layers
+    shared_expert: bool = False
+    # numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    max_seq: int = 4096
+    rope_theta: float = 500000.0
+    unroll: bool = False          # python-loop layers (roofline proxies)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers // self.moe_every if self.n_experts else 0
+
+    @property
+    def n_dense_layers(self) -> int:
+        return self.n_layers - self.n_moe_layers
+
+    def param_count(self) -> int:
+        attn = self.n_layers * (self.d_model * self.n_heads * self.hd * 2
+                                + self.d_model * self.n_kv * self.hd * 2)
+        f = 3 * self.d_model * self.d_ff
+        if self.n_experts:
+            ffn = (self.n_moe_layers * self.n_experts * f
+                   + self.n_dense_layers * f
+                   + (self.n_moe_layers * f if self.shared_expert else 0)
+                   + self.n_moe_layers * self.d_model * self.n_experts)
+        else:
+            ffn = self.n_layers * f
+        return attn + ffn + 2 * self.vocab * self.d_model
+
+    def active_param_count(self) -> int:
+        if not self.n_experts:
+            return self.param_count()
+        attn = self.n_layers * (self.d_model * self.n_heads * self.hd * 2
+                                + self.d_model * self.n_kv * self.hd * 2)
+        f = 3 * self.d_model * self.d_ff
+        ffn = (self.n_moe_layers * self.top_k * f + self.n_dense_layers * f
+               + (self.n_moe_layers * f if self.shared_expert else 0))
+        return attn + ffn + 2 * self.vocab * self.d_model
+
+
+# ------------------------------------------------------------------- init
+def _attn_block_init(key, cfg: LMConfig):
+    return {
+        "attn": gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                         param_dtype=cfg.param_dtype),
+        "ln1": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _dense_ffn_init(key, cfg: LMConfig):
+    kk = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(cfg.d_model)
+    pd = cfg.param_dtype
+    return {
+        "wg": (jax.random.normal(kk[0], (cfg.d_model, cfg.d_ff)) * s).astype(pd),
+        "wu": (jax.random.normal(kk[1], (cfg.d_model, cfg.d_ff)) * s).astype(pd),
+        "wd": (jax.random.normal(kk[2], (cfg.d_ff, cfg.d_model))
+               * (1.0 / math.sqrt(cfg.d_ff))).astype(pd),
+    }
+
+
+def lm_init(key, cfg: LMConfig) -> Dict:
+    """Stacked params: dense stack (n_dense_layers) + moe stack (n_moe)."""
+    k_embed, k_dense, k_moe, k_head = jax.random.split(key, 4)
+
+    def dense_layer(k):
+        k1, k2 = jax.random.split(k)
+        p = _attn_block_init(k1, cfg)
+        p["ffn"] = _dense_ffn_init(k2, cfg)
+        return p
+
+    def moe_layer(k):
+        k1, k2 = jax.random.split(k)
+        p = _attn_block_init(k1, cfg)
+        p["moe"] = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            param_dtype=cfg.param_dtype,
+                            shared_expert=cfg.shared_expert)
+        return p
+
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(cfg.param_dtype),
+        "ln_f": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "head": (jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) * 0.02
+                 ).astype(cfg.param_dtype),
+    }
+    if cfg.n_experts:
+        if cfg.n_dense_layers:
+            params["dense_layers"] = jax.vmap(dense_layer)(
+                jax.random.split(k_dense, cfg.n_dense_layers))
+        params["moe_layers"] = jax.vmap(moe_layer)(
+            jax.random.split(k_moe, cfg.n_moe_layers))
+    else:
+        params["dense_layers"] = jax.vmap(dense_layer)(
+            jax.random.split(k_dense, cfg.n_layers))
+    return params
+
+
+# ---------------------------------------------------------------- helpers
+def _attn(lp, h, cfg: LMConfig, cos, sin, window=None):
+    h2 = rmsnorm_apply(lp["ln1"], h)
+    return h + causal_attention(lp["attn"], h2, cfg.n_heads, cfg.n_kv,
+                                cfg.hd, cos, sin, window=window)
+
+
+def _dense_ffn(lp, h):
+    h2 = rmsnorm_apply(lp["ln2"], h)
+    dt = h.dtype
+    return h + swiglu(h2 @ lp["ffn"]["wg"].astype(dt),
+                      h2 @ lp["ffn"]["wu"].astype(dt)
+                      ) @ lp["ffn"]["wd"].astype(dt)
+
+
+def _moe_ffn(lp, h, cfg: LMConfig):
+    """MoE block.  Under a mesh, dispatch runs SHARD-LOCALLY over the data
+    axes (shard_map with the model axis left auto): per-shard capacity,
+    no global sorts/scatters — the GSPMD-replicated-dispatch failure mode
+    at training T (~10^6 tokens) is structurally impossible.  Expert
+    parallelism over ``model`` still comes from GSPMD inside the body.
+    """
+    from jax.sharding import PartitionSpec as P
+    h2 = rmsnorm_apply(lp["ln2"], h)
+    B, S, D = h2.shape
+    T = B * S
+    mesh = ambient_mesh()
+    data_axes = (tuple(a for a in mesh.axis_names if a != "model")
+                 if mesh is not None else ())
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    has_model = mesh is not None and "model" in mesh.axis_names and \
+        mesh.shape["model"] > 1
+    if (mesh is not None and data_axes and T % n_data == 0 and n_data > 1
+            and has_model and cfg.d_ff % mesh.shape["model"] == 0):
+        h2 = shard_activation(h2, ("batch", None, None))
+        flat = h2.reshape(T, D)
+
+        # chunk dispatch when the per-shard token count is training-scale
+        chunks = 4 if T // n_data >= 16384 else 1
+
+        def body(x_local, moe_p):
+            # fully-manual: dispatch is shard-local over data; each model
+            # shard computes its F-slice of every expert, one psum combines
+            out, aux = moe_apply(moe_p, x_local, cfg.top_k, tp_axis="model",
+                                 token_chunks=chunks)
+            return out, jax.lax.pmean(aux, data_axes)
+
+        moe_in_specs = {"router": P(None, None),
+                        "wg": P(None, None, "model"),
+                        "wu": P(None, None, "model"),
+                        "wd": P(None, "model", None)}
+        if cfg.shared_expert:
+            moe_in_specs["shared"] = {"wg": P(None, "model"),
+                                      "wu": P(None, "model"),
+                                      "wd": P("model", None)}
+        out, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(data_axes, None), moe_in_specs),
+            out_specs=(P(data_axes, None), P()),
+            axis_names=set(mesh.axis_names))(flat, lp["moe"])
+    else:
+        out, aux = moe_apply(lp["moe"], h2.reshape(T, D), cfg.top_k)
+    return h + out.reshape(B, S, D), aux
+
+
+def _model_only_moe_specs(moe_p, mesh):
+    """Constrain expert weights to model-axis-only sharding (drop ZeRO data
+    sharding) so they pass a data-manual shard_map boundary unchanged."""
+    from jax.sharding import PartitionSpec as P
+    mdl = mesh.shape.get("model", 1)
+    E = moe_p["wg"].shape[0]
+    wsc = jax.lax.with_sharding_constraint
+    if mdl > 1 and E % mdl == 0:
+        specs = {"router": P(None, None), "wg": P("model", None, None),
+                 "wu": P("model", None, None), "wd": P("model", None, None)}
+    elif mdl > 1:
+        specs = {"router": P(None, None), "wg": P(None, None, "model"),
+                 "wu": P(None, None, "model"), "wd": P(None, "model", None)}
+    else:
+        return moe_p
+    out = {k: wsc(moe_p[k], specs[k]) for k in specs if k in moe_p}
+    if "shared" in moe_p:
+        sh = moe_p["shared"]
+        out["shared"] = {"wg": wsc(sh["wg"], P(None, "model")),
+                         "wu": wsc(sh["wu"], P(None, "model")),
+                         "wd": wsc(sh["wd"], P("model", None))}
+    return out
+
+
+def _superblock_view(params, cfg: LMConfig):
+    """Reshape the dense stack to (n_super, moe_every-1, ...) for nesting."""
+    per = cfg.moe_every - 1
+    if per == 0 or "dense_layers" not in params:
+        return None
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((cfg.n_moe_layers, per) + a.shape[1:]),
+        params["dense_layers"])
+
+
+# ---------------------------------------------------------------- forward
+def lm_backbone(params, tokens: jax.Array, cfg: LMConfig,
+                remat: bool = True,
+                constrain=None) -> Tuple[jax.Array, jax.Array]:
+    """Token embeddings -> final hidden states (B, S, d_model), aux loss.
+
+    ``constrain(kind, lp)`` re-asserts the per-layer weight sharding INSIDE
+    the scan body: without it XLA hoists the ZeRO-3 weight all-gather out of
+    the loop and materializes every layer at once (the classic FSDP-on-GSPMD
+    pitfall) — with it, one layer is gathered per iteration.
+    """
+    dt = cfg.dtype
+    cos, sin = rope_freqs(cfg.hd, tokens.shape[1], cfg.rope_theta, dtype=dt)
+    h = params["embed"].astype(dt)[tokens]
+    ck = jax.checkpoint if remat else (lambda f: f)
+    cn = constrain if constrain is not None else (lambda kind, lp: lp)
+    # cast layer stacks to the compute dtype OUTSIDE the scan: elementwise on
+    # sharded arrays (no comm), and every per-layer ZeRO all-gather inside
+    # the loop then moves bf16 instead of fp32 — half the collective bytes
+    params = dict(params)
+    for k in ("dense_layers", "moe_layers"):
+        if k in params:
+            params[k] = jax.tree_util.tree_map(
+                lambda a: a.astype(dt) if a.dtype == jnp.float32 else a,
+                params[k])
+
+    if not cfg.n_experts:
+        @ck
+        def dense_step(h, lp):
+            # sequence-parallel carry: the remat stash of h lives seq-sharded
+            # on the model axis (16x smaller); attention gathers seq inside
+            h = shard_activation(h, ("batch", "model", None))
+            lp = cn("dense", lp)
+            h = _dense_ffn(lp, _attn(lp, h, cfg, cos, sin))
+            return shard_activation(h, ("batch", "model", None)), None
+        if cfg.unroll:
+            for i in range(cfg.n_layers):
+                h, _ = dense_step(h, jax.tree_util.tree_map(
+                    lambda a: a[i], params["dense_layers"]))
+        else:
+            h, _ = jax.lax.scan(dense_step, h, params["dense_layers"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        dense_view = _superblock_view(params, cfg)
+
+        @ck
+        def super_step(carry, lps):
+            h, aux = carry
+            h = shard_activation(h, ("batch", "model", None))
+            if dense_view is not None:
+                def dstep(h, lp):
+                    h = shard_activation(h, ("batch", "model", None))
+                    lp = cn("dense", lp)
+                    h = _dense_ffn(lp, _attn(lp, h, cfg, cos, sin))
+                    return shard_activation(h, ("batch", "model", None)), None
+                h, _ = jax.lax.scan(dstep, h, lps["dense"])
+            moe_lp = cn("moe", lps["moe"])
+            h = _attn(moe_lp, h, cfg, cos, sin)
+            h, a = _moe_ffn(moe_lp, h, cfg)
+            h = shard_activation(h, ("batch", "model", None))
+            return (h, aux + a), None
+
+        stacks = {"moe": params["moe_layers"]}
+        if dense_view is not None:
+            stacks["dense"] = dense_view
+        if cfg.unroll:
+            carry = (h, jnp.zeros((), jnp.float32))
+            for i in range(cfg.n_moe_layers):
+                carry, _ = super_step(carry, jax.tree_util.tree_map(
+                    lambda a: a[i], stacks))
+            h, aux = carry
+        else:
+            (h, aux), _ = jax.lax.scan(super_step,
+                                       (h, jnp.zeros((), jnp.float32)),
+                                       stacks)
+    return rmsnorm_apply(params["ln_f"], h), aux
+
+
+def lm_forward(params, tokens: jax.Array, cfg: LMConfig, remat: bool = True,
+               constrain=None) -> Tuple[jax.Array, jax.Array]:
+    """(B, S) tokens -> (B, S, vocab) logits, aux loss."""
+    h, aux = lm_backbone(params, tokens, cfg, remat, constrain)
+    logits = h @ params["head"].astype(cfg.dtype)
+    logits = shard_activation(logits, ("batch", None, "model"))
+    return logits, aux
+
+
+def lm_loss(params, tokens, targets, cfg: LMConfig, aux_weight: float = 0.01,
+            constrain=None, loss_chunks: int = 8):
+    """Chunked-softmax CE: the (B, S, vocab) logits tensor is never
+    materialized — the head matmul + CE run per sequence chunk under remat
+    (1/loss_chunks the live loss-stage memory)."""
+    h, aux = lm_backbone(params, tokens, cfg, constrain=constrain)
+    B, S, D = h.shape
+    n = loss_chunks if S % loss_chunks == 0 else 1
+    hc = jnp.moveaxis(h.reshape(B, n, S // n, D), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, n, S // n), 1, 0)
+    head = params["head"].astype(cfg.dtype)
+
+    @jax.checkpoint
+    def chunk(carry, xt):
+        hb, tb = xt
+        logits = hb @ head
+        logits = shard_activation(logits, ("batch", None, "model"))
+        return carry + cross_entropy(logits, tb) * tb.size, None
+
+    total, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / targets.size + aux_weight * aux
+
+
+# ---------------------------------------------------------------- serving
+def lm_prefill(params, tokens: jax.Array, cfg: LMConfig,
+               window: Optional[int] = None, constrain=None):
+    """Prefill: last-position logits + per-layer KV caches.
+
+    KV caches are returned as a dict {dense: (Ld,B,S,kv,hd) x2,
+    moe: (Lm,...) x2} mirroring the parameter stacks.
+    """
+    dt = cfg.dtype
+    S = tokens.shape[1]
+    cos, sin = rope_freqs(cfg.hd, S, cfg.rope_theta, dtype=dt)
+    h = params["embed"].astype(dt)[tokens]
+    caches = {}
+    cn = constrain if constrain is not None else (lambda kind, lp: lp)
+
+    def attn_prefill(lp, h):
+        h2 = rmsnorm_apply(lp["ln1"], h)
+        att, kv = prefill_attention(lp["attn"], h2, cfg.n_heads, cfg.n_kv,
+                                    cfg.hd, cos, sin, window=window)
+        return h + att, kv
+
+    if not cfg.n_experts:
+        @jax.checkpoint
+        def step(h, lp):
+            h = shard_activation(h, ("batch", "model", None))
+            lp = cn("dense", lp)
+            h, kv = attn_prefill(lp, h)
+            return shard_activation(_dense_ffn(lp, h),
+                                    ("batch", "model", None)), kv
+        if cfg.unroll:
+            kvs = []
+            for i in range(cfg.n_layers):
+                h, kv = step(h, jax.tree_util.tree_map(
+                    lambda a: a[i], params["dense_layers"]))
+                kvs.append(kv)
+            caches["dense"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *kvs)
+        else:
+            h, caches["dense"] = jax.lax.scan(step, h,
+                                              params["dense_layers"])
+    else:
+        dense_view = _superblock_view(params, cfg)
+
+        @jax.checkpoint
+        def super_step(carry, lps):
+            h, aux = carry
+            h = shard_activation(h, ("batch", "model", None))
+            kvs = {}
+            if dense_view is not None:
+                def dstep(h, lp):
+                    h = shard_activation(h, ("batch", "model", None))
+                    lp = cn("dense", lp)
+                    h, kv = attn_prefill(lp, h)
+                    return shard_activation(_dense_ffn(lp, h),
+                                            ("batch", "model", None)), kv
+                h, kvs["dense"] = jax.lax.scan(dstep, h, lps["dense"])
+            moe_lp = cn("moe", lps["moe"])
+            h, kvs["moe"] = attn_prefill(moe_lp, h)
+            h, a = _moe_ffn(moe_lp, h, cfg)
+            return (h, aux + a), kvs
+
+        stacks = {"moe": params["moe_layers"]}
+        if dense_view is not None:
+            stacks["dense"] = dense_view
+        if cfg.unroll:
+            carry = (h, jnp.zeros((), jnp.float32))
+            kvs = []
+            for i in range(cfg.n_moe_layers):
+                carry, kv = super_step(carry, jax.tree_util.tree_map(
+                    lambda a: a[i], stacks))
+                kvs.append(kv)
+            h, _ = carry
+            caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *kvs)
+        else:
+            (h, _), caches = jax.lax.scan(
+                super_step, (h, jnp.zeros((), jnp.float32)), stacks)
+    h = rmsnorm_apply(params["ln_f"], h)
+    logits = h[:, -1:] @ params["head"].astype(dt)
+    return logits, caches
+
+
+def lm_decode_step(params, token: jax.Array, kv_caches, cache_len: jax.Array,
+                   cfg: LMConfig, max_seq: int, constrain=None):
+    """One decode step.  token: (B,1); cache_len: () scalar position.
+
+    kv_caches mirror lm_prefill's output, padded on the sequence axis to
+    ``max_seq`` (possibly mesh-sharded there).  The new token's KV is written
+    into the cache inside the step; returns (logits, updated caches) — the
+    caller donates the old caches.
+    """
+    dt = cfg.dtype
+    cos, sin = rope_freqs(cfg.hd, max_seq + 1, cfg.rope_theta, dtype=dt)
+    h = params["embed"].astype(dt)[token]
+    cn = constrain if constrain is not None else (lambda kind, lp: lp)
+
+    def attn_decode(lp, h, kc, vc):
+        h2 = rmsnorm_apply(lp["ln1"], h)
+        att, kv_new = decode_attention(lp["attn"], h2, (kc, vc), cache_len,
+                                       cfg.n_heads, cfg.n_kv, cfg.hd, cos, sin)
+        return h + att, kv_new
+
+    new_kv = {}
+    if not cfg.n_experts:
+        def step(h, inp):
+            lp, (kc, vc) = inp
+            lp = cn("dense", lp)
+            h, kv = attn_decode(lp, h, kc, vc)
+            return _dense_ffn(lp, h), kv
+        if cfg.unroll:
+            kvs = []
+            for i in range(cfg.n_layers):
+                h, kv = step(h, jax.tree_util.tree_map(
+                    lambda a: a[i],
+                    (params["dense_layers"], kv_caches["dense"])))
+                kvs.append(kv)
+            new_kv["dense"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *kvs)
+        else:
+            h, new_kv["dense"] = jax.lax.scan(
+                step, h, (params["dense_layers"], kv_caches["dense"]))
+    else:
+        dense_view = _superblock_view(params, cfg)
+
+        def super_step(h, inp):
+            lps, kvs = inp
+            out_kv = {}
+            if dense_view is not None:
+                def dstep(h, dinp):
+                    lp, (kc, vc) = dinp
+                    lp = cn("dense", lp)
+                    h, kv = attn_decode(lp, h, kc, vc)
+                    return _dense_ffn(lp, h), kv
+                h, out_kv["dense"] = jax.lax.scan(
+                    dstep, h, (lps["dense"], kvs["dense"]))
+            moe_lp = cn("moe", lps["moe"])
+            h, out_kv["moe"] = attn_decode(moe_lp, h, *kvs["moe"])
+            h, _ = _moe_ffn(moe_lp, h, cfg)
+            return h, out_kv
+
+        stacks = {"moe": params["moe_layers"]}
+        if dense_view is not None:
+            stacks["dense"] = dense_view
+        if cfg.unroll:
+            kvs = []
+            for i in range(cfg.n_moe_layers):
+                h, kv = super_step(h, jax.tree_util.tree_map(
+                    lambda a: a[i], (stacks, kv_caches)))
+                kvs.append(kv)
+            new_kv = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *kvs)
+        else:
+            h, new_kv = jax.lax.scan(super_step, h, (stacks, kv_caches))
+    h = rmsnorm_apply(params["ln_f"], h)
+    logits = h @ params["head"].astype(dt)
+    return logits, new_kv
+
+
+def make_kv_caches(cfg: LMConfig, batch: int, max_seq: int,
+                   dtype=None):
+    """Zero KV caches in the exact structure lm_decode_step scans over."""
+    dtype = dtype or cfg.dtype
+    kv, hd = cfg.n_kv, cfg.hd
+
+    def z(*lead):
+        shape = (*lead, batch, max_seq, kv, hd)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    if not cfg.n_experts:
+        return {"dense": z(cfg.n_layers)}
+    out = {"moe": z(cfg.n_moe_layers)}
+    per = cfg.moe_every - 1
+    if per:
+        out["dense"] = z(cfg.n_moe_layers, per)
+    return out

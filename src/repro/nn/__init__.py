@@ -1,0 +1,9 @@
+from .layers import (linear_init, linear_apply, mlp_init, mlp_apply,
+                     layernorm_init, layernorm_apply, rmsnorm_init,
+                     rmsnorm_apply, embedding_init, embedding_apply,
+                     swiglu, cross_entropy)
+from .attention import (rope_freqs, apply_rope, gqa_init, causal_attention,
+                        prefill_attention, decode_attention)
+from .moe import moe_init, moe_apply
+from .embedding import (embedding_bag_init, embedding_bag_apply,
+                        multi_field_lookup, fused_field_lookup, hash_bucket)

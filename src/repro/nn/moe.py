@@ -1,0 +1,165 @@
+"""Mixture-of-Experts FFN with top-k routing and static capacity.
+
+SPMD-friendly design: dispatch uses dense one-hot combine matrices (static
+shapes) so the same code lowers under pjit with experts sharded on the
+``model`` axis (expert parallelism).  The Rubik lens (DESIGN.md §4): routing
+is a bipartite tokens->experts aggregation; we apply the paper's *reordering*
+idea as in-kernel token sorting by expert id (``sort_tokens=True``) so expert
+gathers hit contiguous blocks — measurable in the collective/memory roofline
+terms.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import swiglu
+from ..dist.sharding import maybe_shard
+from jax.sharding import PartitionSpec
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             param_dtype=jnp.float32, shared_expert: bool = False,
+             d_shared: Optional[int] = None):
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, n_experts)) * s
+                   ).astype(param_dtype),
+        "wg": (jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * s
+               ).astype(param_dtype),
+        "wu": (jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * s
+               ).astype(param_dtype),
+        "wd": (jax.random.normal(ks[3], (n_experts, d_ff, d_model))
+               * (1.0 / math.sqrt(d_ff))).astype(param_dtype),
+    }
+    if shared_expert:
+        dsh = d_shared or d_ff
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": (jax.random.normal(kk[0], (d_model, dsh)) * s
+                   ).astype(param_dtype),
+            "wu": (jax.random.normal(kk[1], (d_model, dsh)) * s
+                   ).astype(param_dtype),
+            "wd": (jax.random.normal(kk[2], (dsh, d_model))
+                   * (1.0 / math.sqrt(dsh))).astype(param_dtype),
+        }
+    return p
+
+
+def moe_apply(p, x: jax.Array, top_k: int, capacity_factor: float = 1.25,
+              sort_tokens: bool = False, tp_axis=None, token_chunks: int = 1):
+    """token_chunks > 1 runs dispatch+experts on T/token_chunks tokens at a
+    time under remat — dispatch buffers shrink proportionally (the memory
+    fix for training-scale T; EXPERIMENTS §Perf granite-moe iteration)."""
+    if token_chunks > 1 and x.shape[0] % token_chunks == 0:
+        xs = x.reshape(token_chunks, x.shape[0] // token_chunks, x.shape[1])
+
+        @jax.checkpoint
+        def chunk(carry, xc):
+            out, aux = moe_apply(p, xc, top_k, capacity_factor, sort_tokens,
+                                 tp_axis)
+            # aux rides in ys (a carried accumulator would change manual-axis
+            # vma under shard_map and break the scan signature)
+            return carry, (out, aux)
+
+        _, (outs, auxs) = jax.lax.scan(chunk, 0, xs)
+        return outs.reshape(x.shape), jnp.mean(auxs)
+    return _moe_apply_impl(p, x, top_k, capacity_factor, sort_tokens, tp_axis)
+
+
+def _moe_apply_impl(p, x: jax.Array, top_k: int, capacity_factor: float = 1.25,
+                    sort_tokens: bool = False, tp_axis=None):
+    """x: (T, d) token-major.  Returns (out, aux_loss).
+
+    Static-capacity dispatch: each expert processes C = ceil(T*k/E * cf)
+    token slots; overflow tokens are dropped (standard Switch/GShard
+    semantics).  Dispatch/combine via gathers on a position map — O(T*k)
+    memory, not the O(T*E*C) one-hot einsum.
+    """
+    T, d = x.shape
+    E = p["router"].shape[1]
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)       # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (T * top_k))
+    aux = E * jnp.sum(me * ce)
+
+    C = max(int(math.ceil(T * top_k / E * capacity_factor)), min(top_k, T))
+    flat_expert = expert_ids.reshape(-1)                      # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    if sort_tokens:
+        # Rubik-style reorder: group assignments by expert so expert gathers
+        # touch contiguous token blocks (graph-level locality analogue).
+        # Sorting is a GLOBAL op — acceptable for serving-sized T, but at
+        # training T (10^6 tokens) GSPMD replicates the sort, so training
+        # uses the sort-free cumsum ranking below (sort_tokens=False).
+        order = jnp.argsort(flat_expert)
+        flat_expert = flat_expert[order]
+        flat_token = flat_token[order]
+        flat_gate = flat_gate[order]
+
+    # position of each assignment within its expert's capacity, sort-free:
+    # one-hot cumulative count (shards cleanly over the token axis)
+    seg_pos = _segment_cumcount(flat_expert, E)
+    keep = seg_pos < C
+    slot = flat_expert * C + jnp.minimum(seg_pos, C - 1)
+
+    # scatter tokens into (E*C, d) expert buffers (expert-parallel rows)
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, E * C - 1)].add(
+        jnp.where(keep[:, None], x[flat_token], 0.0))
+    if tp_axis is None:
+        buf = maybe_shard(buf, PartitionSpec("model", None))
+
+    eb = buf.reshape(E, C, d)
+    if tp_axis is None:
+        eb = maybe_shard(eb, PartitionSpec("model", None, None))
+    # with tp_axis set, wg/wu/wd are LOCAL F-dim slices (manual tensor
+    # parallelism inside each expert): partial products here, one psum below
+    h = swiglu(jnp.einsum("ecd,edf->ecf", eb, p["wg"].astype(x.dtype)),
+               jnp.einsum("ecd,edf->ecf", eb, p["wu"].astype(x.dtype)))
+    eo = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(x.dtype))
+    eo = eo.reshape(E * C, d)
+    if tp_axis is None:
+        eo = maybe_shard(eo, PartitionSpec("model", None))
+
+    # combine back
+    gathered = eo[slot] * (flat_gate[:, None] * keep[:, None]).astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[flat_token].add(gathered)
+
+    if "shared" in p:
+        sh = p["shared"]
+        out = out + swiglu(x @ sh["wg"].astype(x.dtype),
+                           x @ sh["wu"].astype(x.dtype)) @ sh["wd"].astype(x.dtype)
+    if tp_axis is not None:
+        # combine is linear in eo, so psum after combine (T, d) — far
+        # smaller than psum-ing the (E, C, d) expert buffers
+        out = jax.lax.psum(out, tp_axis)
+    return out, aux
+
+
+def _segment_cumcount(seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Rank of each element within its segment, stable in array order.
+
+    Sort-free O(T*E): cumulative sum of the one-hot expert matrix.  The
+    cumsum axis is the (data-sharded) token axis, which GSPMD partitions as
+    local cumsum + exclusive psum of per-shard totals — no global gather.
+    """
+    onehot = (seg_ids[:, None]
+              == jnp.arange(num_segments, dtype=seg_ids.dtype)[None, :]
+              ).astype(jnp.int32)
+    csum = jnp.cumsum(onehot, axis=0)
+    rank = jnp.sum(jnp.where(onehot > 0, csum - 1, 0), axis=1)
+    return rank.astype(jnp.int32)

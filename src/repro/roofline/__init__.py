@@ -1,0 +1,3 @@
+from . import hw
+from .hlo import collective_bytes, parse_collectives, shape_bytes
+from .analysis import CellRoofline, analyze_cell, markdown_row, MD_HEADER

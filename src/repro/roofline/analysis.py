@@ -1,0 +1,190 @@
+"""Three-term roofline analysis per (arch x shape x mesh) cell.
+
+Terms (per chip, seconds):
+  compute    = HLO_FLOPs / PEAK_FLOPS_BF16
+  memory     = HLO_bytes / HBM_BW
+  collective = collective_payload_bytes / ICI_BW
+
+Scan correction (probes showed cost_analysis counts a while body ONCE):
+LM cells are measured via two UNROLLED depth proxies — a 1-unit and a 2-unit
+model (unit = layer, or superblock for interleaved MoE) lowered with the
+identical sharding machinery.  unit_cost = cost(2) - cost(1);
+total = cost(1) + (n_units - 1) * unit_cost.  GNN/recsys archs have no scans,
+so their compiled numbers are used directly.
+
+MODEL_FLOPS sanity ratio: 6*N*D (train, dense), 6*N_active*D (MoE), or
+2*N_active per generated/scored token (serve) over corrected HLO FLOPs —
+flags remat/redundancy waste (ratio << 1 when the compiled graph does much
+more than the model math).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+
+from . import hw
+from .hlo import collective_bytes
+from ..configs import get
+from ..configs.base import LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh_desc: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    peak_gb: float
+    model_flops_global: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / hw.ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        n_chips = 256 if "2x" not in self.mesh_desc else 512
+        hlo_global = self.flops_per_chip * n_chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput as a fraction of the compute roofline:
+        (model_flops / bound_time) / (chips * peak)."""
+        n_chips = 256 if "2x" not in self.mesh_desc else 512
+        ideal = self.model_flops_global / (n_chips * hw.PEAK_FLOPS_BF16)
+        return ideal / max(self.bound_time, 1e-30)
+
+    def suggestion(self) -> str:
+        if self.dominant == "compute":
+            if self.useful_ratio < 0.4:
+                return ("compute-bound but mostly non-model FLOPs: cut remat "
+                        "recompute / loss-stage masking work")
+            return "compute-bound near model math: increase arithmetic intensity only via bigger per-chip batch"
+        if self.dominant == "memory":
+            return ("HBM-bound: raise arithmetic intensity (larger "
+                    "microbatch, fuse aggregation stages, bf16 stashes)")
+        return ("collective-bound: cut payloads (reordered halo exchange, "
+                "gradient compression, LSE-merged decode) or overlap with "
+                "compute")
+
+
+def _lower(bundle, spec, shape, mesh):
+    from ..launch.dryrun import lower_cell
+    return lower_cell(bundle, spec, shape, mesh, compile_=True)
+
+
+def _cost_triple(compiled_result, lowered, compiled) -> Dict[str, float]:
+    cost = compiled_result["cost"]
+    colls = collective_bytes(compiled.as_text())
+    return {"flops": cost["flops_per_device"],
+            "bytes": cost["bytes_per_device"],
+            "coll": colls["total"]}
+
+
+def _model_flops(arch: str, shape: str) -> float:
+    spec = get(arch)
+    if spec.family == "lm":
+        import importlib
+        mod = importlib.import_module(
+            "repro.configs." + arch.replace("-", "_"))
+        cfg = mod.CONFIG
+        info = LM_SHAPES[shape]
+        n_active = cfg.active_param_count()
+        if info["kind"] == "train":
+            return 6.0 * n_active * info["batch"] * info["seq"]
+        if info["kind"] == "prefill":
+            return 2.0 * n_active * info["batch"] * info["seq"]
+        return 2.0 * n_active * info["batch"]          # decode: per token
+    if spec.family == "gnn":
+        bundle = spec.bundle()
+        g = bundle.geometry(shape)
+        params, _ = bundle.abstract_state(shape)
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        # message passing: ~2 flops per edge per feature + dense transforms
+        return 6.0 * (n_params * g["n"] / max(g["d"], 1) + 2.0 * g["e"] * g["d"])
+    # recsys
+    bundle = spec.bundle()
+    info = RECSYS_SHAPES[shape]
+    cfg = bundle.cfg
+    deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    dims = (deep_in,) + cfg.mlp_dims + (1,)
+    mlp_flops = 2.0 * sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    per_ex = mlp_flops + cfg.n_sparse * cfg.embed_dim * 2.0
+    mult = 3.0 if info["kind"] == "train" else 1.0
+    total = per_ex * info["batch"] * mult
+    if shape == "retrieval_cand":
+        total += 2.0 * info["n_candidates"] * cfg.mlp_dims[-1]
+    return total
+
+
+def analyze_cell(arch: str, shape: str, mesh, mesh_desc: str) -> CellRoofline:
+    import dataclasses as dc
+    spec = get(arch)
+    bundle = spec.bundle()
+
+    if spec.family == "lm":
+        from ..configs.families import LMBundle
+        cfg = bundle.cfg
+        unit = cfg.moe_every if cfg.n_experts else 1
+        n_units = cfg.n_layers // unit
+
+        def proxy(units):
+            c = dc.replace(cfg, n_layers=units * unit, unroll=True)
+            return LMBundle(c, moments_dtype=bundle.moments_dtype)
+
+        r1, l1, c1 = _lower(proxy(1), spec, shape, mesh)
+        t1 = _cost_triple(r1, l1, c1)
+        r2, l2, c2 = _lower(proxy(2), spec, shape, mesh)
+        t2 = _cost_triple(r2, l2, c2)
+        unit_cost = {k: max(t2[k] - t1[k], 0.0) for k in t1}
+        total = {k: t1[k] + (n_units - 1) * unit_cost[k] for k in t1}
+        rf, _, cf = _lower(bundle, spec, shape, mesh)   # full: memory truth
+        peak = rf["memory"]["peak_gb_per_device"]
+    else:
+        rf, lf, cf = _lower(bundle, spec, shape, mesh)
+        total = _cost_triple(rf, lf, cf)
+        peak = rf["memory"]["peak_gb_per_device"]
+
+    return CellRoofline(arch=arch, shape=shape, mesh_desc=mesh_desc,
+                        flops_per_chip=total["flops"],
+                        bytes_per_chip=total["bytes"],
+                        coll_bytes_per_chip=total["coll"],
+                        peak_gb=peak,
+                        model_flops_global=_model_flops(arch, shape))
+
+
+def markdown_row(r: CellRoofline) -> str:
+    return (f"| {r.arch} | {r.shape} | {r.t_compute:.3e} | {r.t_memory:.3e} "
+            f"| {r.t_collective:.3e} | **{r.dominant}** | "
+            f"{r.model_flops_global:.2e} | {r.useful_ratio:.2f} | "
+            f"{r.roofline_fraction:.2%} | {r.peak_gb:.1f} | "
+            f"{r.suggestion()} |")
+
+
+MD_HEADER = ("| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL_FLOPS | useful ratio | roofline frac | "
+             "peak GB/chip | what would move the dominant term |\n"
+             "|---|---|---|---|---|---|---|---|---|---|---|")

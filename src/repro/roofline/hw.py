@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants (the TARGET; this container is CPU-only)."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link (~per-chip usable for ring ops)
+HBM_BYTES = 16e9              # per chip
+CHIPS_PER_POD = 256
+
+# DCI (inter-pod) is far slower than ICI; pod-axis collectives cross it.
+DCI_BW = 12.5e9               # B/s per chip, conservative

@@ -1,0 +1,9 @@
+from .optimizer import (Optimizer, sgd, adam, lamb, apply_updates,
+                        clip_by_global_norm, global_norm,
+                        cosine_warmup_schedule, OPTIMIZERS)
+from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
+                         AsyncCheckpointer)
+from .fault import (StepWatchdog, resume, elastic_mesh,
+                    deterministic_batch_seed, RetryingStep)
+from .data import lm_token_batches, recsys_batches, Prefetcher
+from .loop import fit, make_train_step, TrainResult

@@ -1,0 +1,134 @@
+"""Sharded checkpointing: save/restore param+optimizer pytrees, async writer.
+
+Format: one ``.npz`` per checkpoint step holding flattened leaves (keyed by
+pytree path) + a small JSON manifest (step, mesh shape, config digest).
+Restore re-shards onto whatever mesh is active — the elastic-restart path
+(fault.py) relies on this to resume on a smaller/larger mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state,
+                    extra: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    blobs = {}
+    for prefix, tree in (("params", params), ("opt", opt_state)):
+        for k, v in _flatten_with_paths(tree).items():
+            blobs[f"{prefix}:{k}"] = v
+    np.savez(tmp, **blobs)
+    os.replace(tmp, path)   # atomic publish: no torn checkpoints on crash
+    manifest = {"step": step, "leaves": len(blobs), **(extra or {})}
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    _gc_old(ckpt_dir, keep=3)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, params_template, opt_template,
+                       step: Optional[int] = None,
+                       shardings: Optional[Tuple] = None):
+    """Restore into the structure of the templates; device_put with the given
+    (params_sharding, opt_sharding) if provided (elastic re-shard)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
+
+    def rebuild(prefix, template, sh):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        sh_flat = (jax.tree_util.tree_flatten(sh)[0]
+                   if sh is not None else [None] * len(flat))
+        for (path, leaf), s in zip(flat, sh_flat):
+            key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                           for p in path)
+            arr = data[f"{prefix}:{key}"]
+            leaves.append(jax.device_put(arr, s) if s is not None
+                          else jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    p_sh, o_sh = shardings if shardings else (None, None)
+    return (rebuild("params", params_template, p_sh),
+            rebuild("opt", opt_template, o_sh), step)
+
+
+def _gc_old(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(int(f[5:13]) for f in os.listdir(ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    for s in steps[:-keep]:
+        for ext in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(ckpt_dir, f"step_{s:08d}{ext}"))
+            except OSError:
+                pass
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: the train loop hands off host copies and
+    keeps stepping (checkpoint I/O overlaps compute)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self.last_error: Optional[Exception] = None
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, params, opt_state, extra = item
+            try:
+                save_checkpoint(self.ckpt_dir, step, params, opt_state, extra)
+            except Exception as e:   # surfaced on next save()/close()
+                self.last_error = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, params, opt_state, extra=None):
+        if self.last_error:
+            raise self.last_error
+        host = jax.tree_util.tree_map(np.asarray, (params, opt_state))
+        self._q.put((step, host[0], host[1], extra))
+
+    def wait(self):
+        self._q.join()
+        if self.last_error:
+            raise self.last_error
+
+    def close(self):
+        self._q.join()
+        self._q.put(None)
+        self._worker.join(timeout=10)

@@ -1,0 +1,83 @@
+"""Data pipelines: synthetic token stream (LM), graph epochs (GNN), click
+logs (recsys).  Deterministic per (seed, step, shard) — see fault.py.
+Double-buffered host->device prefetch overlaps H2D with compute.
+"""
+from __future__ import annotations
+
+import threading
+from queue import Queue
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from .fault import deterministic_batch_seed
+
+
+def lm_token_batches(vocab: int, batch: int, seq: int, seed: int = 0,
+                     start_step: int = 0) -> Iterator[dict]:
+    """Zipf-ish synthetic token stream; targets = inputs shifted by one."""
+    step = start_step
+    while True:
+        rng = np.random.default_rng(deterministic_batch_seed(seed, step, 0))
+        # zipfian ids bounded to vocab
+        raw = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64)
+        toks = (raw % vocab).astype(np.int32)
+        yield {"tokens": toks[:, :-1], "targets": toks[:, 1:], "step": step}
+        step += 1
+
+
+def gnn_epoch_batches(sampler, batch_nodes: int, steps: int, seed: int = 0):
+    """Wrapper over graph.sampler.NeighborSampler batches."""
+    return sampler.batches(batch_nodes, steps)
+
+
+def recsys_batches(cfg, batch: int, seed: int = 0, start_step: int = 0
+                   ) -> Iterator[dict]:
+    step = start_step
+    while True:
+        rng = np.random.default_rng(deterministic_batch_seed(seed, step, 0))
+        ids = rng.integers(0, cfg.rows_per_field,
+                           size=(batch, cfg.n_sparse)).astype(np.int32)
+        dense = rng.standard_normal((batch, cfg.n_dense)).astype(np.float32)
+        # weak ground-truth signal so training converges measurably
+        w = rng.standard_normal(cfg.n_dense).astype(np.float32)
+        labels = (dense @ w + 0.1 * rng.standard_normal(batch) > 0
+                  ).astype(np.float32)
+        yield {"sparse": ids, "dense": dense, "labels": labels, "step": step}
+        step += 1
+
+
+class Prefetcher:
+    """One-deep background prefetch: next batch is device_put while the
+    current step runs."""
+
+    def __init__(self, it: Iterator, sharding=None, depth: int = 2):
+        self.it = it
+        self.sharding = sharding
+        self.q: Queue = Queue(maxsize=depth)
+        self.t = threading.Thread(target=self._run, daemon=True)
+        self.t.start()
+
+    def _put(self, batch):
+        if self.sharding is not None:
+            batch = {k: (jax.device_put(v, self.sharding.get(k))
+                         if k in self.sharding else v)
+                     for k, v in batch.items()}
+        self.q.put(batch)
+
+    def _run(self):
+        try:
+            for batch in self.it:
+                self._put(batch)
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item

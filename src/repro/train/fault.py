@@ -1,0 +1,100 @@
+"""Fault tolerance & elasticity (DESIGN.md §5, 1000+-node posture).
+
+Mechanisms:
+  * checkpoint/restart — resume() restores the latest atomic checkpoint
+    (checkpoint.py writes are atomic-rename, so crashes never leave torn
+    state) and re-shards onto the CURRENT mesh.
+  * elastic re-mesh — on losing a pod/slice, rebuild the mesh with a smaller
+    data axis and resume: parameters re-shard automatically (restore takes
+    shardings), the data pipeline re-seeds deterministically from the step.
+  * straggler mitigation — (a) deterministic data dispatch keyed by
+    (step, shard) so any replacement worker reproduces the batch; (b) a
+    step-time watchdog that flags outliers (on real fleets this triggers
+    backup-worker dispatch; on this single-host container it logs).
+  * at-least-once step semantics — train loop persists (step, rng) in the
+    checkpoint; replays of the same step are bit-identical, so duplicated
+    work from restarts is harmless.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from .checkpoint import latest_step, restore_checkpoint
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    """Flags straggling steps: > ``threshold`` x rolling-median step time."""
+
+    threshold: float = 3.0
+    window: int = 32
+    history: List[float] = dataclasses.field(default_factory=list)
+    flagged: int = 0
+
+    def observe(self, seconds: float) -> bool:
+        self.history.append(seconds)
+        if len(self.history) > self.window:
+            self.history.pop(0)
+        med = float(np.median(self.history))
+        slow = len(self.history) >= 8 and seconds > self.threshold * med
+        if slow:
+            self.flagged += 1
+        return slow
+
+
+def resume(ckpt_dir: str, params_template, opt_template, shardings=None):
+    """Restore the latest checkpoint if one exists; else return templates.
+
+    Returns (params, opt_state, start_step)."""
+    if latest_step(ckpt_dir) is None:
+        return params_template, opt_template, 0
+    p, o, step = restore_checkpoint(ckpt_dir, params_template, opt_template,
+                                    shardings=shardings)
+    return p, o, step + 1
+
+
+def elastic_mesh(preferred_shape, axis_names, min_data: int = 1):
+    """Build the largest mesh <= preferred_shape that the surviving devices
+    support, shrinking the data axis first (model sharding is topology-bound,
+    data sharding is elastic)."""
+    n = len(jax.devices())
+    shape = list(preferred_shape)
+    data_idx = axis_names.index("data")
+    while int(np.prod(shape)) > n and shape[data_idx] > min_data:
+        shape[data_idx] //= 2
+    if int(np.prod(shape)) > n:
+        raise RuntimeError(f"not enough devices: need {np.prod(shape)}, "
+                           f"have {n}")
+    return jax.make_mesh(
+        tuple(shape), tuple(axis_names),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+
+
+def deterministic_batch_seed(base_seed: int, step: int, shard: int) -> int:
+    """Any worker can regenerate any shard's batch for any step — the
+    property backup workers / restarts rely on."""
+    return (base_seed * 1_000_003 + step) * 65_537 + shard
+
+
+class RetryingStep:
+    """Wrap a jitted step with bounded retry on transient device errors."""
+
+    def __init__(self, fn: Callable, max_retries: int = 2):
+        self.fn = fn
+        self.max_retries = max_retries
+        self.retries = 0
+
+    def __call__(self, *args, **kw):
+        for attempt in range(self.max_retries + 1):
+            try:
+                return self.fn(*args, **kw)
+            except jax.errors.JaxRuntimeError:
+                self.retries += 1
+                if attempt == self.max_retries:
+                    raise
+                time.sleep(0.1 * 2 ** attempt)

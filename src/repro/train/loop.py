@@ -1,0 +1,78 @@
+"""Generic training loop: jit'd step + checkpointing + watchdog + logging.
+
+The loop is model-agnostic: the caller supplies ``loss_fn(params, batch)``
+and the optimizer; everything else (grad clip, fault hooks, async
+checkpoints, throughput accounting) is shared across the 10 archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import Optimizer, apply_updates, clip_by_global_norm
+from .checkpoint import AsyncCheckpointer
+from .fault import StepWatchdog, resume
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    opt_state: Any
+    losses: list
+    steps: int
+    straggler_flags: int
+    wall_time: float
+
+
+def make_train_step(loss_fn: Callable, opt: Optimizer,
+                    clip_norm: Optional[float] = 1.0,
+                    donate: bool = True):
+    """Returns jit'd (params, opt_state, batch) -> (params, opt_state, loss)."""
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def fit(loss_fn: Callable, opt: Optimizer, params, batches: Iterator,
+        steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+        log_every: int = 10, clip_norm: Optional[float] = 1.0,
+        log: Callable = print) -> TrainResult:
+    opt_state = opt.init(params)
+    start = 0
+    if ckpt_dir:
+        params, opt_state, start = resume(ckpt_dir, params, opt_state)
+    step_fn = make_train_step(loss_fn, opt, clip_norm)
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    watchdog = StepWatchdog()
+    losses = []
+    t0 = time.time()
+    i = start
+    for i, batch in zip(range(start, steps), batches):
+        ts = time.time()
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        loss = float(loss)
+        losses.append(loss)
+        slow = watchdog.observe(time.time() - ts)
+        if slow:
+            log(f"[straggler] step {i} took "
+                f"{time.time() - ts:.3f}s (flagged)")
+        if log_every and i % log_every == 0:
+            log(f"step {i:6d}  loss {loss:.4f}")
+        if ckpt and i and i % ckpt_every == 0:
+            ckpt.save(i, params, opt_state)
+    if ckpt:
+        ckpt.save(i, params, opt_state)
+        ckpt.close()
+    return TrainResult(params=params, opt_state=opt_state, losses=losses,
+                       steps=i + 1 - start, straggler_flags=watchdog.flagged,
+                       wall_time=time.time() - t0)

@@ -1,0 +1,121 @@
+"""Optimizers in pure JAX (no optax dependency): SGD, Adam, AdamW, LAMB.
+
+Functional API: ``opt.init(params) -> state``; ``opt.update(grads, state,
+params) -> (updates, state)``; apply with ``apply_updates``.  All states are
+pytrees that inherit the parameter shardings under pjit (ZeRO-style sharded
+optimizer states for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g,
+                                    state["mu"], grads)
+        upd = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        return upd, {"mu": mu, "step": state["step"] + 1}
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0,
+         lr_schedule: Optional[Callable] = None,
+         moments_dtype=jnp.float32) -> Optimizer:
+    """Adam/AdamW.  Moments default to fp32; very large MoE archs can use
+    bf16 moments to halve optimizer memory (DESIGN.md §5 trade-off)."""
+    def init(params):
+        z32 = lambda p: jnp.zeros(p.shape, moments_dtype)
+        return {"m": jax.tree_util.tree_map(z32, params),
+                "v": jax.tree_util.tree_map(z32, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        cur_lr = lr_schedule(step) * lr if lr_schedule else lr
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd_fn(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = (b1 * m.astype(jnp.float32) + (1 - b1) * g32
+                 ).astype(moments_dtype)
+            v = (b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+                 ).astype(moments_dtype)
+            u = (-(cur_lr) * (m.astype(jnp.float32) / bc1)
+                 / (jnp.sqrt(v.astype(jnp.float32) / bc2) + eps))
+            if weight_decay:
+                u = u - cur_lr * weight_decay * p.astype(jnp.float32)
+            return u, m, v
+
+        flat = jax.tree_util.tree_map(upd_fn, grads, state["m"], state["v"],
+                                      params if params is not None else grads)
+        three = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return three(0), {"m": three(1), "v": three(2), "step": step}
+    return Optimizer(init, update)
+
+
+def lamb(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+         weight_decay: float = 0.01) -> Optimizer:
+    """LAMB: layerwise-adaptive Adam for very large batches."""
+    base = adam(1.0, b1, b2, eps, 0.0)
+
+    def init(params):
+        return base.init(params)
+
+    def update(grads, state, params):
+        raw, state = base.update(grads, state, params)
+
+        def trust(u, p):
+            pn = jnp.linalg.norm(p.astype(jnp.float32))
+            adj = u - weight_decay * p.astype(jnp.float32)
+            un = jnp.linalg.norm(adj)
+            ratio = jnp.where((pn > 0) & (un > 0), pn / un, 1.0)
+            return lr * ratio * adj
+        return jax.tree_util.tree_map(trust, raw, params), state
+    return Optimizer(init, update)
+
+
+def cosine_warmup_schedule(warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return sched
+
+
+OPTIMIZERS = {"sgd": sgd, "adam": adam, "adamw": adam, "lamb": lamb}

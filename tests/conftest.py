@@ -1,0 +1,29 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; only launch/dryrun.py forces 512 host devices (brief §0)."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def community_graph():
+    from repro.graph import synthesize, DatasetSpec
+    return synthesize(DatasetSpec("test", 2048, 60_000, 64, 4,
+                                  community=0.92, num_communities=12, seed=1))
+
+
+@pytest.fixture(scope="session")
+def cora():
+    from repro.graph import cora_like
+    return cora_like(seed=0)

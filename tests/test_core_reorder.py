@@ -1,0 +1,142 @@
+"""Rubik core: reordering properties + shared-set plan correctness
+(unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import Graph, synthesize, DatasetSpec
+from repro.core import (lsh_reorder, minhash_reorder, degree_reorder,
+                        bfs_reorder, identity_order, lsh_reorder_jax,
+                        build_shared_plan, segment_aggregate, shared_aggregate,
+                        build_blockell, blockell_aggregate, simulate_gd,
+                        simulate_gd_gc, mean_reuse_distance)
+
+
+def _random_graph(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    return Graph(src=src, dst=dst, num_nodes=n)
+
+
+# ------------------------------------------------------------ reorderings
+@pytest.mark.parametrize("fn", [lsh_reorder, minhash_reorder, degree_reorder,
+                                bfs_reorder, identity_order])
+def test_reorder_is_permutation(fn, community_graph):
+    perm = fn(community_graph)
+    assert sorted(perm.tolist()) == list(range(community_graph.num_nodes))
+
+
+def test_permute_preserves_structure(community_graph):
+    """Reordering changes execution order, never the graph (paper §IV-A)."""
+    g = community_graph
+    perm = minhash_reorder(g)
+    g2 = g.permute(perm)
+    assert g2.num_valid_edges == g.num_valid_edges
+    assert np.array_equal(np.sort(g2.in_degrees()), np.sort(g.in_degrees()))
+    # edge set is isomorphic under the permutation
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    e1 = set(zip(inv[g.src].tolist(), inv[g.dst].tolist()))
+    e2 = set(zip(g2.src.tolist(), g2.dst.tolist()))
+    assert e1 == e2
+
+
+def test_aggregation_permutation_equivariance(community_graph, rng):
+    g = community_graph
+    perm = minhash_reorder(g)
+    g2 = g.permute(perm)
+    x = jnp.asarray(rng.standard_normal((g.num_nodes, 16)).astype(np.float32))
+    a1 = segment_aggregate(x, jnp.asarray(g.src), jnp.asarray(g.dst),
+                           g.num_nodes)
+    a2 = segment_aggregate(x[perm], jnp.asarray(g2.src), jnp.asarray(g2.dst),
+                           g2.num_nodes)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2)[inv], atol=1e-4)
+
+
+def test_lsh_improves_reuse_distance(community_graph):
+    g = community_graph
+    base = mean_reuse_distance(g)
+    lr = mean_reuse_distance(g.permute(minhash_reorder(g)))
+    assert lr < base * 0.95, (lr, base)  # cache sims measure the real win
+
+
+def test_lsh_reorder_jax_matches_permutation(community_graph):
+    g = community_graph
+    perm = np.asarray(lsh_reorder_jax(jnp.asarray(g.src), jnp.asarray(g.dst),
+                                      g.num_nodes))
+    assert sorted(perm.tolist()) == list(range(g.num_nodes))
+
+
+# ------------------------------------------------------- shared-set plans
+@pytest.mark.parametrize("levels", [1, 2, 4])
+@pytest.mark.parametrize("op", ["sum", "mean", "max", "min"])
+def test_shared_aggregate_matches_segment(community_graph, rng, levels, op):
+    g = community_graph.permute(minhash_reorder(community_graph))
+    plan = build_shared_plan(g, levels=levels)
+    x = jnp.asarray(rng.standard_normal((g.num_nodes, 8)).astype(np.float32))
+    a = segment_aggregate(x, jnp.asarray(g.src), jnp.asarray(g.dst),
+                          g.num_nodes, op=op)
+    b = shared_aggregate(x, plan, op=op)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_shared_plan_conserves_edges(community_graph):
+    g = community_graph.permute(minhash_reorder(community_graph))
+    plan = build_shared_plan(g, levels=1)
+    covered = plan.residual_src.shape[0] + sum(
+        s.shape[0] * 2 ** (l + 1) for l, s in enumerate(plan.level_src))
+    assert covered == plan.original_edges
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 64), e=st.integers(1, 400), seed=st.integers(0, 999),
+       levels=st.integers(1, 3))
+def test_shared_plan_property(n, e, seed, levels):
+    """Property: for ANY graph, the shared-set rewrite is exact (sum)."""
+    g = _random_graph(n, e, seed)
+    plan = build_shared_plan(g, levels=levels)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, 4)).astype(np.float32))
+    a = segment_aggregate(x, jnp.asarray(g.src), jnp.asarray(g.dst), n)
+    b = shared_aggregate(x, plan)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+# ------------------------------------------------------------- block-ELL
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(10, 300), e=st.integers(1, 800), seed=st.integers(0, 99))
+def test_blockell_property(n, e, seed):
+    g = _random_graph(n, e, seed).with_sym_norm()
+    ell = build_blockell(g, bm=64, bk=64)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, 8)).astype(np.float32))
+    ref = segment_aggregate(x, jnp.asarray(g.src), jnp.asarray(g.dst), n,
+                            edge_weight=jnp.asarray(g.edge_weight))
+    out = blockell_aggregate(ell, x)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=1e-4)
+
+
+# ------------------------------------------------------------ cache model
+def test_cache_sim_reorder_reduces_traffic(community_graph):
+    g = community_graph
+    base = simulate_gd(g, 16, 64 * 1024, 64)
+    lr = simulate_gd(g.permute(minhash_reorder(g)), 16, 64 * 1024, 64)
+    assert lr.offchip_bytes < base.offchip_bytes
+    assert base.hit_rate < lr.hit_rate
+
+
+def test_cache_sim_gc_consistent(community_graph):
+    g = community_graph.permute(minhash_reorder(community_graph))
+    plan = build_shared_plan(g, levels=1)
+    rep = simulate_gd_gc(g, plan, 16, 32 * 1024, 32 * 1024, 64)
+    # reductions performed can never exceed the unoptimized edge count + SA
+    # consumes, and traffic is positive
+    assert rep.reductions_performed <= plan.original_edges * 2
+    assert rep.offchip_bytes > 0
+    assert 0.0 <= rep.hit_rate <= 1.0

@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps vs ref.py oracles (brief deliverable c)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import Graph
+from repro.kernels import spmm, spmm_ref, embedding_bag, decode_attention
+from repro.kernels import ref as kref
+from repro.core import build_blockell, minhash_reorder
+
+
+def _graph(n, e, seed):
+    rng = np.random.default_rng(seed)
+    return Graph(src=rng.integers(0, n, e).astype(np.int32),
+                 dst=rng.integers(0, n, e).astype(np.int32),
+                 num_nodes=n).with_sym_norm()
+
+
+# ------------------------------------------------------------------ spmm
+@pytest.mark.parametrize("n,e,d", [(300, 2000, 32), (512, 8000, 128),
+                                   (1000, 5000, 48), (129, 517, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_spmm_shapes(n, e, d, dtype):
+    g = _graph(n, e, seed=n + e)
+    ell = build_blockell(g, bm=128, bk=128)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(dtype))
+    out = spmm(ell, x)
+    ref_block = spmm_ref(ell, x)
+    ref_edge = kref.spmm_edges_ref(jnp.asarray(g.src), jnp.asarray(g.dst),
+                                   jnp.asarray(g.edge_weight), x, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_block),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_edge),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk", [(64, 64), (128, 128), (128, 256)])
+def test_spmm_block_shapes(bm, bk):
+    g = _graph(500, 4000, seed=7)
+    ell = build_blockell(g, bm=bm, bk=bk)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (500, 64)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(spmm(ell, x)),
+                               np.asarray(spmm_ref(ell, x)), atol=1e-4)
+
+
+def test_spmm_reordered_fewer_active_blocks(community_graph):
+    g = community_graph.with_sym_norm()
+    g2 = g.permute(minhash_reorder(g)).with_sym_norm()
+    e1 = build_blockell(g, bm=128, bk=128)
+    e2 = build_blockell(g2, bm=128, bk=128)
+    # reordering concentrates edges -> denser active blocks
+    assert (e2.density_stats()["mean_block_density"]
+            >= e1.density_stats()["mean_block_density"])
+
+
+# ---------------------------------------------------------- embedding bag
+@settings(max_examples=15, deadline=None)
+@given(v=st.integers(4, 300), d=st.integers(1, 100), L=st.integers(1, 200),
+       bags=st.integers(1, 32), seed=st.integers(0, 99),
+       weighted=st.booleans())
+def test_embedding_bag_property(v, d, L, bags, seed, weighted):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((v, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, v, L).astype(np.int32))
+    bag_ids = jnp.asarray(rng.integers(0, bags, L).astype(np.int32))
+    w = (jnp.asarray(rng.standard_normal(L).astype(np.float32))
+         if weighted else None)
+    out = embedding_bag(ids, bag_ids, table, bags, weights=w)
+    ref = kref.embedding_bag_ref(ids, bag_ids,
+                                 w if w is not None else jnp.ones(L), table,
+                                 bags)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_embedding_bag_empty_bags():
+    table = jnp.ones((10, 8))
+    ids = jnp.array([1, 2], dtype=jnp.int32)
+    bag_ids = jnp.array([0, 3], dtype=jnp.int32)
+    out = embedding_bag(ids, bag_ids, table, 5)
+    assert np.allclose(np.asarray(out[1]), 0.0)
+    assert np.allclose(np.asarray(out[4]), 0.0)
+    assert np.allclose(np.asarray(out[0]), 1.0)
+
+
+# -------------------------------------------------------- decode attention
+@pytest.mark.parametrize("B,S,H,d,bs", [(1, 256, 2, 64, 64),
+                                        (2, 1024, 4, 128, 256),
+                                        (3, 512, 1, 32, 512)])
+def test_decode_attention_shapes(B, S, H, d, bs):
+    rng = np.random.default_rng(B + S)
+    q = jnp.asarray(rng.standard_normal((B, H, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, H, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, H, d)).astype(np.float32))
+    cl = jnp.asarray(rng.integers(1, S + 1, B).astype(np.int32))
+    out = decode_attention(q, k, v, cl, bs=bs)
+    ref = kref.decode_attention_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_decode_attention_bf16():
+    rng = np.random.default_rng(5)
+    B, S, H, d = 2, 512, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, H, d))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, H, d))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, H, d))).astype(jnp.bfloat16)
+    cl = jnp.array([300, 512], dtype=jnp.int32)
+    out = decode_attention(q, k, v, cl, bs=128)
+    ref = kref.decode_attention_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(ref, dtype=np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_decode_attention_masking():
+    """Tokens past cache_len must not affect the output."""
+    rng = np.random.default_rng(9)
+    B, S, H, d = 1, 256, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, H, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, H, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, H, d)).astype(np.float32))
+    cl = jnp.array([100], dtype=jnp.int32)
+    out1 = decode_attention(q, k, v, cl, bs=64)
+    k2 = k.at[:, 100:].set(999.0)
+    v2 = v.at[:, 100:].set(-999.0)
+    out2 = decode_attention(q, k2, v2, cl, bs=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
