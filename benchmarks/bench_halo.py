@@ -1,5 +1,11 @@
 """Multi-pod collective benefit: reordering shrinks halo-exchange volume
 (the beyond-paper transfer of Rubik's locality insight to mesh collectives).
+
+For each partition count, compares per-chip collective bytes of one
+aggregation three ways: halo exchange on the index-order graph, halo exchange
+after minhash-LSH reordering, and the GSPMD all-gather baseline (which ships
+the full feature table regardless of ordering).  The verdict line asserts the
+headline claim: reordered halo < index halo AND reordered halo < all-gather.
 """
 from __future__ import annotations
 
@@ -12,15 +18,23 @@ from .common import dataset, emit
 def main() -> None:
     g = dataset("REDDIT")
     for parts in (16, 64):
+        est = {}
         for tag, gg in (("index", g),
                         ("reordered", g.permute(minhash_reorder(g)))):
             plan = build_halo_plan(gg, parts)
             send = build_send_plan(plan)
-            est = collective_bytes_estimate(plan, send, d=128)
+            est[tag] = collective_bytes_estimate(plan, send, d=128)
             emit(f"halo/{parts}parts/{tag}", 0.0,
-                 f"cut_edges={est['cut_edge_fraction']:.3f} "
-                 f"halo_bytes/chip={est['halo_bytes_per_chip_real']/1e6:.1f}MB "
-                 f"vs allgather={est['allgather_bytes_per_chip']/1e6:.1f}MB")
+                 f"cut_edges={est[tag]['cut_edge_fraction']:.3f} "
+                 f"halo_bytes/chip={est[tag]['halo_bytes_per_chip_real']/1e6:.1f}MB "
+                 f"vs allgather={est[tag]['allgather_bytes_per_chip']/1e6:.1f}MB")
+        reordered = est["reordered"]["halo_bytes_per_chip_real"]
+        beats_index = reordered < est["index"]["halo_bytes_per_chip_real"]
+        beats_allgather = reordered < est["reordered"]["allgather_bytes_per_chip"]
+        emit(f"halo/{parts}parts/verdict", 0.0,
+             f"reordered_beats_index={beats_index} "
+             f"reordered_beats_allgather={beats_allgather} "
+             f"reduction_vs_allgather={est['reordered']['reduction_vs_allgather']:.2f}x")
 
 
 if __name__ == "__main__":

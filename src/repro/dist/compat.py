@@ -1,0 +1,82 @@
+"""jax API compat shims for the distribution layer.
+
+The repo targets the modern mesh/shard_map surface (``jax.shard_map`` with
+``axis_names=``, ``jax.sharding.AxisType``, ``jax.make_mesh(axis_types=...)``)
+but must also run on jax 0.4.x where shard_map still lives in
+``jax.experimental.shard_map`` with the ``auto=`` spelling and meshes carry no
+axis types.  ``ensure_jax_compat()`` installs forward-compatible aliases onto
+the ``jax`` namespace when (and only when) the modern names are missing, so
+every caller — tests, benchmarks, launch scripts — writes one dialect.
+
+Imported for its side effect by ``repro.dist`` (and ``repro.launch.mesh``),
+so any entry point that touches the distribution layer is covered.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def ensure_jax_compat() -> None:
+    """Idempotently install modern-jax aliases on old jax versions."""
+    _ensure_shard_map()
+    _ensure_axis_type()
+
+
+def _ensure_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  axis_names=None, check_rep=None, **kwargs):
+        """Modern keyword surface -> legacy ``auto=``/``check_rep=`` call.
+
+        ``axis_names`` lists the MANUAL axes; legacy shard_map instead takes
+        the complementary ``auto`` set.  ``check_rep`` defaults off: the
+        legacy replication checker predates several collectives we rely on
+        (tiled all_to_all under partial-auto meshes) and rejects valid
+        programs.
+        """
+        auto = frozenset()
+        if axis_names is not None and mesh is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=bool(check_rep), auto=auto, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _ensure_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+    _make_mesh = getattr(jax, "make_mesh", None)
+    if _make_mesh is None:       # pre-0.4.35 jax has no make_mesh at all
+        from jax.sharding import Mesh
+        import numpy as _np
+
+        def _make_mesh(axis_shapes, axis_names, *, devices=None):
+            devices = devices if devices is not None else jax.devices()
+            arr = _np.asarray(devices).reshape(tuple(axis_shapes))
+            return Mesh(arr, tuple(axis_names))
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        # Old meshes are implicitly all-Auto; the annotation is advisory
+        # there, so accept and drop it.
+        return _make_mesh(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+ensure_jax_compat()

@@ -1,0 +1,65 @@
+"""Gradient-compression collectives: int8 all-reduce and top-k sparsification.
+
+The halo exchange attacks the aggregation collective; these attack the other
+distributed hot loop, the gradient all-reduce.  Both are EXPERIMENT
+primitives — numerically honest (quantization error and sparsification
+residual are exactly what a real wire format would produce) while the
+transport itself rides the stock psum.
+
+* ``int8_allreduce_psum`` — per-row absmax int8 quantization before the
+  reduce: 4x wire bytes saved in a real int8 all-reduce, error bounded by
+  absmax/254 per element.
+* ``topk_compress`` — magnitude top-k with error feedback: the caller carries
+  the residual and adds it back next step, so mass is conserved exactly
+  (``kept + err == grad + residual_in``) and the compression bias vanishes
+  over steps (the standard deep-gradient-compression argument).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8: returns (q int8, scale f32) with
+    ``dequantize = q * scale``; rows are the leading axis."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = (absmax / 127.0).astype(jnp.float32)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_allreduce_psum(g: jax.Array, axis_name: str) -> jax.Array:
+    """psum of the per-row int8-quantized gradient (inside shard_map).
+
+    Each shard contributes its quantized-then-dequantized rows; the wire
+    format of a real implementation is the int8 payload plus one f32 scale
+    per row — 4x smaller than the f32 ring all-reduce.
+    """
+    q, scale = quantize_int8(g)
+    return jax.lax.psum(dequantize_int8(q, scale).astype(g.dtype), axis_name)
+
+
+def topk_compress(g: jax.Array, residual: jax.Array, k_frac: float = 0.01
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Magnitude top-k with error feedback.
+
+    Returns ``(kept, err)`` where ``kept`` holds the k_frac largest-magnitude
+    entries of ``g + residual`` (the values a sparse all-reduce would ship)
+    and ``err`` the left-behind remainder to carry into the next step.
+    Invariant: ``kept + err == g + residual`` exactly.
+    """
+    acc = g + residual
+    flat = jnp.abs(acc).reshape(-1)
+    k = max(1, int(flat.shape[0] * k_frac))
+    _, idx = jax.lax.top_k(flat, k)
+    mask = jnp.zeros(flat.shape, bool).at[idx].set(True).reshape(acc.shape)
+    kept = jnp.where(mask, acc, 0.0)
+    return kept, acc - kept

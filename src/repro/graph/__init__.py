@@ -3,6 +3,6 @@ from .datasets import (DatasetSpec, PAPER_TABLE_I, spec_for_paper, synthesize,
                        cora_like, reddit_like, citeseer_s_like, products_like,
                        molecules_like)
 from .partition import (Partition, HaloPlan, window_partition, build_halo_plan,
-                        cut_edges)
+                        cut_edges, uniform_local_n)
 from .sampler import NeighborSampler, MiniBatch, SampledBlock, static_block_shapes
 from .batching import GraphBatch, pack

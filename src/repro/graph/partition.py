@@ -140,6 +140,19 @@ def build_halo_plan(g: Graph, num_parts: int,
                     cut_edges=cut, total_edges=int(valid.sum()))
 
 
+def uniform_local_n(parts: Partition) -> int:
+    """The common window size when all windows are equal — the shape SPMD
+    execution requires (every mesh shard owns an identical node count).
+    Raises for ragged partitions; pad the graph to a multiple of
+    ``num_parts`` first (``dist.gnn.pad_graph_nodes``)."""
+    sizes = parts.sizes()
+    if sizes.size == 0 or not (sizes == sizes[0]).all():
+        raise ValueError(
+            f"ragged partition (windows {sizes.min()}..{sizes.max()}); "
+            f"pad num_nodes to a multiple of {parts.num_parts}")
+    return int(sizes[0])
+
+
 def cut_edges(g: Graph, num_parts: int) -> int:
     """Cheap cut-edge count for a contiguous-window partition of ``g``."""
     parts = window_partition(g.num_nodes, num_parts)

@@ -62,6 +62,8 @@ def lower_cell(bundle, spec, shape: str, mesh, compile_: bool = True):
                                        + ma.temp_size_in_bytes) / 1e9,
             }
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+                ca = ca[0] if ca else {}
             result["cost"] = {"flops_per_device": ca.get("flops", 0.0),
                               "bytes_per_device": ca.get("bytes accessed",
                                                          0.0)}

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax
 
+from ..dist import compat as _compat  # noqa: F401  (jax API shims)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -22,3 +24,18 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for tests on a handful of host devices."""
     return jax.make_mesh(shape, axes,
                          axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_halo_debug_mesh(parts: int | None = None):
+    """1-D data mesh for the dist halo-exchange path, one shard per part.
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get
+    N shards on CPU; defaults to every visible device.
+    """
+    parts = parts or jax.device_count()
+    if jax.device_count() < parts:
+        raise ValueError(
+            f"need {parts} devices, have {jax.device_count()}; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={parts}")
+    return jax.make_mesh((parts,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -71,8 +71,29 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--dist", action="store_true",
+                    help="shard the graph over all devices and route "
+                         "aggregation through the halo exchange (GNN only); "
+                         "use XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 for a CPU debug mesh")
+    ap.add_argument("--parts", type=int, default=None,
+                    help="number of graph shards for --dist "
+                         "(default: device count)")
     args = ap.parse_args(argv)
     spec = get(args.arch)
+    if args.dist:
+        if spec.family != "gnn":
+            ap.error(f"--dist supports GNN archs; {args.arch} is "
+                     f"family '{spec.family}'")
+        if args.ckpt is not None:
+            ap.error("--ckpt is not supported with --dist yet")
+        from ..dist import train_distributed
+        res = train_distributed(args.arch, steps=args.steps,
+                                parts=args.parts)
+        losses = res["losses"]
+        print(f"{args.arch} [dist]: {len(losses)} steps, loss "
+              f"{losses[0]:.4f} -> {losses[-1]:.4f}")
+        return
     driver = {"lm": lm_reduced_driver, "gnn": gnn_driver,
               "recsys": recsys_driver}[spec.family]
     res = driver(args.arch, args.steps, args.ckpt)

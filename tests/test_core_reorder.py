@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, st  # guarded hypothesis import
 
 from repro.graph import Graph, synthesize, DatasetSpec
 from repro.core import (lsh_reorder, minhash_reorder, degree_reorder,

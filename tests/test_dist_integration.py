@@ -67,11 +67,16 @@ print("DIST_OK")
 """
 
 
+# JAX_PLATFORMS must survive into the stripped env: without it jax probes
+# any installed TPU plugin (60s+ hang) before falling back to CPU.
+_SUBPROC_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                "JAX_PLATFORMS": "cpu"}
+
+
 @pytest.mark.slow
 def test_distributed_paths():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=480,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       text=True, timeout=900, env=_SUBPROC_ENV)
     assert "DIST_OK" in r.stdout, r.stdout + r.stderr
 
 
@@ -96,6 +101,6 @@ print("DRYRUN_OK")
 @pytest.mark.slow
 def test_dryrun_debug_mesh():
     r = subprocess.run([sys.executable, "-c", DRYRUN_SCRIPT],
-                       capture_output=True, text=True, timeout=480,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       capture_output=True, text=True, timeout=900,
+                       env=_SUBPROC_ENV)
     assert "DRYRUN_OK" in r.stdout, r.stdout + r.stderr

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, st  # guarded hypothesis import
 
 from repro.graph import Graph
 from repro.kernels import spmm, spmm_ref, embedding_bag, decode_attention

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, st  # guarded hypothesis import
 
 from repro.nn.attention import flash_attention
 from repro.nn.moe import moe_init, moe_apply

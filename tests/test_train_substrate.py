@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, st  # guarded hypothesis import
 
 from repro.train import (adam, sgd, lamb, apply_updates, global_norm,
                          clip_by_global_norm, save_checkpoint,
