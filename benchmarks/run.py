@@ -1,7 +1,13 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows.
+
+``--only <substring>`` runs just the modules whose name contains the
+substring (e.g. ``--only serve`` or ``--only fig9``), so a single figure or
+bench can be iterated on without paying for the whole suite.
+"""
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
@@ -13,13 +19,23 @@ MODULES = [
     "benchmarks.bench_fig10_preprocessing",
     "benchmarks.bench_kernels",
     "benchmarks.bench_halo",
+    "benchmarks.bench_serve",
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, metavar="SUBSTRING",
+                    help="run only modules whose name contains SUBSTRING")
+    args = ap.parse_args(argv)
+    selected = [m for m in MODULES
+                if args.only is None or args.only in m]
+    if not selected:
+        sys.exit(f"--only {args.only!r} matches none of: "
+                 + ", ".join(m.rsplit('.', 1)[1] for m in MODULES))
     print("name,us_per_call,derived")
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in selected:
         t0 = time.time()
         try:
             mod = __import__(mod_name, fromlist=["main"])

@@ -25,16 +25,34 @@ from .mapping import GraphLevelMapping, map_graph_level, pe_edge_lists
 from .shared_set import SharedSetPlan
 
 
-class LRUCache:
-    """Exact LRU with integer keys; counts hits/misses."""
+_MISS = object()   # get() sentinel: distinguishes "absent" from cached None
 
-    __slots__ = ("capacity", "store", "hits", "misses")
+
+class LRUCache:
+    """Exact LRU with integer keys; counts hits/misses/evictions.
+
+    Two usage modes share the same eviction machinery:
+
+    * presence-only (``access``/``insert``) — the offline G-D/G-C traffic
+      simulators below, where only the hit/miss stream matters;
+    * value-bearing (``get``/``put``) — the online embedding cache in
+      ``repro.serve.cache``, which stores real per-node vectors.
+    """
+
+    __slots__ = ("capacity", "store", "hits", "misses", "evictions")
 
     def __init__(self, capacity: int):
         self.capacity = max(int(capacity), 1)
         self.store: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.store
 
     def access(self, key: int) -> bool:
         st = self.store
@@ -46,6 +64,7 @@ class LRUCache:
         st[key] = None
         if len(st) > self.capacity:
             st.popitem(last=False)
+            self.evictions += 1
         return False
 
     def insert(self, key: int) -> None:
@@ -56,6 +75,37 @@ class LRUCache:
         st[key] = None
         if len(st) > self.capacity:
             st.popitem(last=False)
+            self.evictions += 1
+
+    # ---------------------------------------------------- value-bearing API
+    def get(self, key: int):
+        """Return the stored value (refreshing recency) or ``LRUCache.MISS``."""
+        st = self.store
+        if key in st:
+            st.move_to_end(key)
+            self.hits += 1
+            return st[key]
+        self.misses += 1
+        return _MISS
+
+    def put(self, key: int, value) -> None:
+        """Insert/refresh ``key`` with ``value`` (no hit/miss accounting)."""
+        st = self.store
+        if key in st:
+            st[key] = value
+            st.move_to_end(key)
+            return
+        st[key] = value
+        if len(st) > self.capacity:
+            st.popitem(last=False)
+            self.evictions += 1
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+
+LRUCache.MISS = _MISS
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,5 +4,6 @@ from .datasets import (DatasetSpec, PAPER_TABLE_I, spec_for_paper, synthesize,
                        molecules_like)
 from .partition import (Partition, HaloPlan, window_partition, build_halo_plan,
                         cut_edges, uniform_local_n)
-from .sampler import NeighborSampler, MiniBatch, SampledBlock, static_block_shapes
+from .sampler import (NeighborSampler, MiniBatch, SampledBlock,
+                      FullNeighborhood, static_block_shapes)
 from .batching import GraphBatch, pack

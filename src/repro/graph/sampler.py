@@ -108,12 +108,56 @@ class NeighborSampler:
                          edge_src=edge_src, edge_dst=edge_dst,
                          layer_sizes=layer_sizes)
 
+    def expand(self, nodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """One-hop fanout expansion as flat (src, dst) global-id edge lists.
+
+        The serve engine's per-layer frontier step: each node draws exactly
+        ``fanouts[0]`` in-neighbors (with replacement), so downstream shapes
+        stay static.  Approximate — use ``FullNeighborhood`` when the engine
+        must match the offline full-graph forward exactly.
+        """
+        nodes = np.asarray(nodes, dtype=np.int32)
+        fanout = self.fanouts[0]
+        src = self._sample_neighbors(nodes, fanout).reshape(-1)
+        dst = np.repeat(nodes, fanout)
+        return src, dst
+
     def batches(self, batch_nodes: int, num_batches: int):
         """Yield minibatches over random seed draws (training stream)."""
         n = self.g.num_nodes
         for _ in range(num_batches):
             seeds = self.rng.choice(n, size=batch_nodes, replace=n < batch_nodes)
             yield self.sample(seeds.astype(np.int32))
+
+
+class FullNeighborhood:
+    """Exact one-hop expander: *all* in-neighbors of each node.
+
+    The serving counterpart of ``NeighborSampler`` for workloads that must
+    reproduce the offline full-graph forward bit-for-bit (oracle serving):
+    a block built by repeated ``expand`` calls aggregates over exactly the
+    edges the full-graph executor would, so with global degrees the sampled
+    forward equals the full forward on the requested nodes.
+    """
+
+    def __init__(self, g: Graph):
+        self.g = g
+        self.csr: CSR = g.csr()
+
+    def expand(self, nodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(B,) node ids -> flat (src, dst) covering every in-edge of each."""
+        nodes = np.asarray(nodes, dtype=np.int32)
+        ptr = self.csr.indptr
+        starts = ptr[nodes]
+        counts = (ptr[nodes + 1] - starts).astype(np.int64)
+        total = int(counts.sum())
+        if total == 0:
+            return (np.empty(0, np.int32), np.empty(0, np.int32))
+        base = np.repeat(starts, counts)
+        local = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+        src = self.csr.indices[base + local].astype(np.int32)
+        dst = np.repeat(nodes, counts).astype(np.int32)
+        return src, dst
 
 
 def static_block_shapes(batch_nodes: int, fanouts: Sequence[int],

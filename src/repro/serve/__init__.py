@@ -1,0 +1,8 @@
+"""Online GNN/recsys inference: reorder-aware embedding cache + dynamic
+micro-batching + oracle-checked request path (paper §IV-B2, online form)."""
+from .cache import EmbeddingCache, CacheStats
+from .batcher import (Request, MicroBatch, MicroBatcher, pow2_bucket,
+                      zipfian_trace)
+from .engine import ServeEngine, ServeReport, RequestRecord
+from .registry import (GNNSession, WideDeepSession, SESSION_BUILDERS,
+                       make_session)

@@ -1,0 +1,219 @@
+"""The online request path: batcher -> cache -> sampled forward -> cache.
+
+Per flushed micro-batch the engine:
+
+1. dedupes the requested node ids;
+2. looks the survivors up in the final-layer embedding cache — hits are
+   served without touching the graph;
+3. builds the L-hop dependency block for the misses top-down, *pruning* every
+   subtree whose root embedding is already cached at that layer (the runtime
+   form of the paper's G-C rule: one cached partial eliminates the whole
+   shared set's loads and reductions);
+4. gathers leaf features only for nodes no cache layer could serve;
+5. runs the per-layer forward bottom-up and inserts every computed embedding
+   back into its layer's cache.
+
+With the ``FullNeighborhood`` expander and global degrees the computed rows
+equal the offline full-graph forward exactly, so the engine can assert an
+oracle check on every served request.  Latency bookkeeping combines the
+trace's simulated arrival/flush clock with measured compute wall-time
+(queueing backpressure between batches is not modeled).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .batcher import MicroBatch, MicroBatcher, Request
+from .cache import CacheStats, EmbeddingCache
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    req_id: int
+    node_id: int
+    latency: float            # seconds: flush wait + batch compute
+    t_done: float             # completion time on the trace clock
+    oracle_err: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeReport:
+    num_requests: int
+    num_batches: int
+    p50_ms: float
+    p99_ms: float
+    req_per_s: float
+    max_oracle_err: float
+    cache: Optional[CacheStats]
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache.hit_rate if self.cache is not None else 0.0
+
+
+class ServeEngine:
+    """Drives one session behind a micro-batcher and an embedding cache."""
+
+    def __init__(self, session, cache: Optional[EmbeddingCache] = None,
+                 batcher: Optional[MicroBatcher] = None,
+                 oracle_check: bool = True):
+        self.session = session
+        self.cache = cache
+        self.batcher = batcher or MicroBatcher()
+        self.oracle_check = oracle_check
+        self.records: List[RequestRecord] = []
+        self.num_batches = 0
+        self.max_oracle_err = 0.0
+
+    # -------------------------------------------------------------- warming
+    def warm(self, order: np.ndarray,
+             layers: Optional[Sequence[int]] = None) -> int:
+        """Preload every cache layer along an execution order (e.g. the
+        ``lsh_reorder`` permutation) from the offline layer values."""
+        if self.cache is None:
+            return 0
+        n = 0
+        for l in (layers if layers is not None
+                  else range(self.session.num_layers + 1)):
+            n += self.cache.warm(l, order, self.session.layer_values(l))
+        return n
+
+    # ------------------------------------------------------------- compute
+    def _compute(self, seeds: np.ndarray) -> np.ndarray:
+        """Embed unique ``seeds`` via the cache-pruned sampled block."""
+        sess, cache = self.session, self.cache
+        L = sess.num_layers
+        assert L >= 1, "leaf-only sessions are served directly in _embed"
+
+        need: List[Optional[np.ndarray]] = [None] * (L + 1)
+        edges: List[Optional[tuple]] = [None] * (L + 1)
+        known: List[Dict[int, np.ndarray]] = [dict() for _ in range(L + 1)]
+        need[L] = seeds
+        for l in range(L, 0, -1):
+            if need[l].size == 0:
+                need[l - 1] = np.empty(0, np.int32)
+                edges[l] = (np.empty(0, np.int32), np.empty(0, np.int32))
+                continue
+            src, dst = sess.expand(need[l])
+            edges[l] = (src, dst)
+            children = np.unique(np.concatenate([src, need[l]]))
+            if cache is not None and l - 1 >= 1:
+                mask, vals = cache.lookup(l - 1, children)
+                for u, hit, v in zip(children, mask, vals):
+                    if hit:
+                        known[l - 1][int(u)] = v
+                need[l - 1] = children[~mask]
+            else:
+                need[l - 1] = children
+
+        if need[0].size:
+            base = (cache.fetch_base(need[0], sess.gather)
+                    if cache is not None else sess.gather(need[0]))
+            for i, u in enumerate(need[0]):
+                known[0][int(u)] = base[i]
+
+        for l in range(1, L + 1):
+            B = need[l]
+            if B.size == 0:
+                continue
+            src, dst = edges[l]
+            lut = {int(u): i for i, u in enumerate(B)}
+            dst_index = np.fromiter((lut[int(x)] for x in dst),
+                                    dtype=np.int32, count=dst.shape[0])
+            prev = known[l - 1]
+            d_prev = sess.layer_dims[l - 1]
+            src_h = (np.stack([prev[int(u)] for u in src])
+                     if src.size else np.empty((0, d_prev), np.float32))
+            self_h = np.stack([prev[int(u)] for u in B])
+            h = sess.layer_forward(l, B, src, dst_index, src_h, self_h)
+            if cache is not None:
+                cache.put_many(l, B, h)
+            for i, u in enumerate(B):
+                known[l][int(u)] = h[i]
+
+        return np.stack([known[L][int(u)] for u in seeds])
+
+    def _embed(self, unique_ids: np.ndarray) -> np.ndarray:
+        L = self.session.num_layers
+        if L == 0:
+            # leaf-only session (recsys tower): the line cache IS the path
+            if self.cache is not None:
+                return self.cache.fetch_base(unique_ids, self.session.gather)
+            return self.session.gather(unique_ids)
+        out = np.empty((unique_ids.shape[0], self.session.layer_dims[L]),
+                       np.float32)
+        if self.cache is not None:
+            mask, vals = self.cache.lookup(L, unique_ids)
+            for i, (hit, v) in enumerate(zip(mask, vals)):
+                if hit:
+                    out[i] = v
+        else:
+            mask = np.zeros(unique_ids.shape[0], bool)
+        miss = unique_ids[~mask]
+        if miss.size:
+            out[~mask] = self._compute(miss)
+        return out
+
+    # -------------------------------------------------------------- serving
+    def process_batch(self, mb: MicroBatch) -> np.ndarray:
+        """Serve one flushed micro-batch; returns (live, d) embeddings."""
+        t0 = time.perf_counter()
+        live_ids = mb.node_ids[mb.valid]
+        unique_ids, inverse = np.unique(live_ids, return_inverse=True)
+        emb = self._embed(unique_ids)[inverse]
+        compute_dt = time.perf_counter() - t0
+        self.num_batches += 1
+
+        errs = np.zeros(live_ids.shape[0], np.float32)
+        if self.oracle_check:
+            ref = self.session.oracle(live_ids)
+            errs = np.max(np.abs(emb - ref), axis=-1)
+            self.max_oracle_err = max(self.max_oracle_err,
+                                      float(errs.max(initial=0.0)))
+        t_done = mb.t_flush + compute_dt
+        for i, r in enumerate(mb.requests):
+            self.records.append(RequestRecord(
+                req_id=r.req_id, node_id=r.node_id,
+                latency=t_done - r.t_arrival, t_done=t_done,
+                oracle_err=float(errs[i])))
+        return emb
+
+    def serve(self, requests: Sequence[Request]) -> ServeReport:
+        """Run a whole trace through the batcher and report."""
+        stream = sorted(requests, key=lambda r: r.t_arrival)
+        for req in stream:
+            due = self.batcher.due()
+            if due is not None and req.t_arrival >= due:
+                mb = self.batcher.poll(due)
+                if mb is not None:
+                    self.process_batch(mb)
+            mb = self.batcher.submit(req)
+            if mb is not None:
+                self.process_batch(mb)
+        t_end = self.batcher.due()
+        if t_end is None and stream:
+            t_end = stream[-1].t_arrival
+        mb = self.batcher.drain(t_end if t_end is not None else 0.0)
+        if mb is not None:
+            self.process_batch(mb)
+        return self.report()
+
+    def report(self) -> ServeReport:
+        lat = np.array([r.latency for r in self.records], np.float64)
+        if lat.size:
+            p50, p99 = np.percentile(lat, [50, 99])
+            t0 = min(r.t_done - r.latency for r in self.records)
+            t1 = max(r.t_done for r in self.records)
+            rate = lat.size / max(t1 - t0, 1e-9)
+        else:
+            p50 = p99 = rate = 0.0
+        return ServeReport(
+            num_requests=len(self.records), num_batches=self.num_batches,
+            p50_ms=float(p50) * 1e3, p99_ms=float(p99) * 1e3,
+            req_per_s=float(rate),
+            max_oracle_err=self.max_oracle_err,
+            cache=self.cache.stats() if self.cache is not None else None)

@@ -1,0 +1,166 @@
+"""Fast tests for the online serving subsystem (repro.serve).
+
+NumPy-path units for the batcher (bucketing, deadline flush) and the
+shared LRU/embedding cache, the reorder-warmed >= cold hit-rate ordering on
+Zipfian traffic, and the engine-vs-offline-forward oracle for every
+registered session.  Example-based only (hypothesis-free; see tests/_ht.py
+for the guard the property suites use)."""
+import numpy as np
+import pytest
+
+from repro.core import minhash_reorder
+from repro.core.cache_model import LRUCache
+from repro.serve import (EmbeddingCache, MicroBatcher, Request, ServeEngine,
+                         make_session, pow2_bucket, zipfian_trace)
+
+SEED = 0
+
+
+# ----------------------------------------------------------------- batcher
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert pow2_bucket(100, cap=64) == 64
+
+
+def test_batcher_flushes_when_full():
+    b = MicroBatcher(max_batch=4, max_wait=1.0)
+    out = [b.submit(Request(i, i + 10, t_arrival=0.1 * i)) for i in range(4)]
+    assert out[:3] == [None, None, None]
+    mb = out[3]
+    assert mb is not None and mb.reason == "full"
+    assert mb.bucket_size == 4 and mb.num_live == 4
+    assert mb.node_ids.tolist() == [10, 11, 12, 13]
+    assert mb.valid.all()
+    assert b.pending == []
+
+
+def test_batcher_deadline_flush_pads_pow2():
+    b = MicroBatcher(max_batch=8, max_wait=0.010)
+    for i in range(3):
+        assert b.submit(Request(i, i, t_arrival=0.001 * i)) is None
+    assert b.poll(0.005) is None          # oldest has waited only 5ms
+    assert b.due() == pytest.approx(0.010)
+    mb = b.poll(0.012)
+    assert mb is not None and mb.reason == "deadline"
+    assert mb.bucket_size == 4            # 3 live -> pow2 pad to 4
+    assert mb.node_ids.tolist() == [0, 1, 2, 2]   # pad repeats last live id
+    assert mb.valid.tolist() == [True, True, True, False]
+    assert mb.t_flush == 0.012
+
+
+def test_batcher_drain_and_bucket_discipline():
+    b = MicroBatcher(max_batch=16, max_wait=10.0)
+    assert b.drain(0.0) is None
+    for i in range(5):
+        b.submit(Request(i, i, t_arrival=0.0))
+    mb = b.drain(1.0)
+    assert mb.reason == "drain" and mb.bucket_size == 8
+    # every flushed bucket is one of the log2(max_batch)+1 static shapes
+    assert mb.bucket_size in {1, 2, 4, 8, 16}
+
+
+# ------------------------------------------------------------------- cache
+def test_lru_value_api_shares_eviction_with_simulator():
+    lru = LRUCache(2)
+    lru.put(1, "a")
+    lru.put(2, "b")
+    assert lru.get(1) == "a"              # refreshes 1; 2 is now LRU
+    lru.put(3, "c")                       # evicts 2
+    assert lru.get(2) is LRUCache.MISS
+    assert lru.get(3) == "c"
+    assert lru.evictions == 1
+    assert lru.hits == 2 and lru.misses == 1
+
+
+def test_line_fetch_counts_and_prefetches():
+    n, d, line = 64, 8, 4
+    order = np.random.default_rng(SEED).permutation(n)
+    feats = np.arange(n * d, dtype=np.float32).reshape(n, d)
+    cache = EmbeddingCache([d], capacity_bytes=line * d * 4 * 4,
+                           order=order, line_size=line)
+    loads = []
+    loader = lambda ids: (loads.append(len(ids)), feats[ids])[1]
+    # probe two order-adjacent nodes: one line load serves both
+    got = cache.fetch_base(order[:2], loader)
+    np.testing.assert_array_equal(got, feats[order[:2]])
+    assert loads == [line]
+    st = cache.stats()
+    assert st.misses == 1 and st.hits == 0          # one line access, missed
+    # the same line is resident now
+    cache.fetch_base(order[2:3], loader)
+    assert cache.stats().hits == 1 and loads == [line]
+
+
+def test_warm_preloads_execution_order_windows():
+    n, d = 32, 4
+    order = np.arange(n)[::-1].copy()               # any permutation
+    vals = np.random.default_rng(SEED).standard_normal((n, d)).astype(np.float32)
+    cache = EmbeddingCache([d, d], capacity_bytes=2 * 8 * d * 4,
+                           order=order, line_size=4)
+    warmed = cache.warm(0, order, vals) + cache.warm(1, order, vals)
+    assert warmed > 0
+    # warmed head of the order hits without any loader call
+    got = cache.fetch_base(order[:4], lambda ids: pytest.fail("load hit warm"))
+    np.testing.assert_array_equal(got, vals[order[:4]])
+    mask, v = cache.lookup(1, order[:2])
+    assert mask.all() and np.allclose(v[0], vals[order[0]])
+
+
+# ----------------------------------------------------- hit-rate ordering
+def test_reorder_warmed_beats_cold_on_zipf(community_graph):
+    g = community_graph
+    order = minhash_reorder(g)
+    trace = zipfian_trace(g.num_nodes, 150, a=1.1, seed=3)
+
+    def run(warm):
+        sess = make_session("gcn", g, hidden=16, out_dim=8, seed=0)
+        cache = EmbeddingCache(sess.layer_dims, capacity_bytes=400_000,
+                               order=order, line_size=16,
+                               split=(0.7, 0.2, 0.1))
+        eng = ServeEngine(sess, cache,
+                          MicroBatcher(max_batch=8, max_wait=1e-3),
+                          oracle_check=False)
+        if warm:
+            eng.warm(order)
+        return eng.serve(trace)
+
+    cold, warm = run(False), run(True)
+    assert warm.hit_rate >= cold.hit_rate
+    assert warm.cache.bytes_missed <= cold.cache.bytes_missed
+
+
+# ------------------------------------------------------------------ oracle
+@pytest.mark.parametrize("model", ["gcn", "sage_gin"])
+def test_engine_matches_offline_oracle(community_graph, model):
+    """Every served embedding equals the offline full-graph forward."""
+    g = community_graph
+    sess = make_session(model, g, hidden=16, out_dim=8, seed=0)
+    cache = EmbeddingCache(sess.layer_dims, capacity_bytes=200_000,
+                           order=minhash_reorder(g), line_size=16)
+    eng = ServeEngine(sess, cache, MicroBatcher(max_batch=8, max_wait=1e-3),
+                      oracle_check=True)
+    eng.warm(minhash_reorder(g))
+    rep = eng.serve(zipfian_trace(g.num_nodes, 100, a=1.2, seed=1))
+    assert rep.num_requests == 100
+    assert rep.max_oracle_err < 1e-4
+    assert rep.p99_ms >= rep.p50_ms > 0
+
+
+def test_engine_no_cache_matches_oracle(community_graph):
+    sess = make_session("gcn", community_graph, hidden=16, out_dim=8, seed=0)
+    eng = ServeEngine(sess, cache=None,
+                      batcher=MicroBatcher(max_batch=4, max_wait=1e-3))
+    rep = eng.serve(zipfian_trace(community_graph.num_nodes, 40, seed=2))
+    assert rep.max_oracle_err < 1e-4
+    assert rep.cache is None
+
+
+def test_widedeep_session_serves_through_engine():
+    sess = make_session("wide_deep", None, num_users=256, seed=0)
+    cache = EmbeddingCache(sess.layer_dims, capacity_bytes=64_000,
+                           line_size=1, num_nodes=256)
+    eng = ServeEngine(sess, cache, MicroBatcher(max_batch=8, max_wait=1e-3))
+    rep = eng.serve(zipfian_trace(256, 120, a=1.3, seed=4))
+    assert rep.max_oracle_err < 1e-4
+    # Zipf repeats must hit the tower cache
+    assert rep.cache.hits > 0
