@@ -1,9 +1,15 @@
 """Shared benchmark utilities: dataset stand-ins scaled for CPU runtime,
-timers, CSV emission (name,us_per_call,derived per the harness contract)."""
+timers, CSV emission (name,us_per_call,derived per the harness contract).
+
+Every ``emit`` also lands in the module-level ``RESULTS`` list so
+``run.py --json PATH`` can dump a machine-readable record of the whole run
+(the ``BENCH_*.json`` trajectory); pass structured extras as keyword args."""
 from __future__ import annotations
 
+import json
+import platform
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, List
 
 import numpy as np
 
@@ -57,5 +63,30 @@ def _block(out):
         pass
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
+RESULTS: List[dict] = []
+
+
+def emit(name: str, us: float, derived: str = "", **extra) -> None:
+    """Print the CSV row and record it (plus structured extras) for --json."""
     print(f"{name},{us:.1f},{derived}")
+    rec = {"name": name, "us_per_call": float(us), "derived": derived}
+    rec.update(extra)
+    RESULTS.append(rec)
+
+
+def dump_results(path: str) -> None:
+    """Write everything emitted so far as one JSON document."""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        backend = "unknown"
+    doc = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "platform": platform.platform(),
+        "jax_backend": backend,
+        "results": RESULTS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {len(RESULTS)} results to {path}")

@@ -4,6 +4,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
 ``--only <substring>`` runs just the modules whose name contains the
 substring (e.g. ``--only serve`` or ``--only fig9``), so a single figure or
 bench can be iterated on without paying for the whole suite.
+
+``--json PATH`` additionally dumps every emitted row (with any structured
+extras the bench attached) as one machine-readable document — the repo's
+``BENCH_*.json`` trajectory comes from committing these.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ MODULES = [
     "benchmarks.bench_fig8_speedup_energy",
     "benchmarks.bench_fig10_preprocessing",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_exec",
     "benchmarks.bench_halo",
     "benchmarks.bench_serve",
 ]
@@ -27,6 +32,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, metavar="SUBSTRING",
                     help="run only modules whose name contains SUBSTRING")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all emitted results to PATH as JSON")
     args = ap.parse_args(argv)
     selected = [m for m in MODULES
                 if args.only is None or args.only in m]
@@ -45,6 +52,9 @@ def main(argv=None) -> None:
             failures += 1
             print(f"# {mod_name} FAILED")
             traceback.print_exc()
+    if args.json:
+        from benchmarks.common import dump_results
+        dump_results(args.json)
     if failures:
         sys.exit(1)
 

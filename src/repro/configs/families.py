@@ -269,7 +269,14 @@ class GNNBundle:
             base["deg"] = SDS((n,), jnp.float32)
         return base
 
-    def loss_fn(self, shape: str):
+    def loss_fn(self, shape: str, executor: str = "segment",
+                exec_plan=None):
+        """``executor="blockell"`` + a ``repro.exec.GraphExecutionPlan``
+        routes GCN aggregation through the fused block-ELL engine (the plan
+        is closed over; its custom VJP keeps the loss differentiable)."""
+        if executor == "blockell" and exec_plan is None:
+            raise ValueError("executor='blockell' needs an exec_plan "
+                             "(repro.exec.build_plan / autotune_plan)")
         g = self.geometry(shape)
 
         def loss(params, batch):
@@ -286,7 +293,7 @@ class GNNBundle:
             mask = batch["train_mask"]
             if self.arch == "gcn":
                 return gcn_loss(params, batch["x"], graph, batch["labels"],
-                                mask)
+                                mask, executor=executor, ell=exec_plan)
             if self.arch == "gat":
                 return gat_loss(params, batch["x"], graph, batch["labels"],
                                 mask)

@@ -5,7 +5,8 @@ from .reorder import (lsh_reorder, minhash_reorder, degree_reorder, bfs_reorder,
                       identity_order, lsh_reorder_jax, mean_reuse_distance,
                       bandwidth, REORDERINGS)
 from .shared_set import SharedSetPlan, build_shared_plan
-from .blocksparse import BlockEll, build_blockell, traffic_model, choose_block_shape
+from .blocksparse import (BlockEll, BlockCompaction, build_blockell,
+                          transpose_graph, traffic_model, choose_block_shape)
 from .aggregate import (segment_aggregate, shared_aggregate, blockell_matmul,
                         blockell_aggregate)
 from .mapping import (GraphLevelMapping, NodeLevelTiling, map_graph_level,

@@ -139,5 +139,6 @@ def blockell_matmul(block_cols: jax.Array, blocks: jax.Array, x: jax.Array,
 
 def blockell_aggregate(ell, x: jax.Array) -> jax.Array:
     """Convenience wrapper over numpy BlockEll containers."""
-    return blockell_matmul(jnp.asarray(ell.block_cols), jnp.asarray(ell.blocks),
+    return blockell_matmul(jnp.asarray(ell.block_cols),
+                           jnp.asarray(ell.dense_blocks()),
                            x, ell.bm, ell.bk)

@@ -1,0 +1,33 @@
+"""repro.exec — compiled graph-execution plans: the aggregation hot path.
+
+A :class:`GraphExecutionPlan` compiles a :class:`repro.graph.Graph` **once**
+into everything the training and serving hot paths need to run
+``y = s_out ⊙ (A (s_in ⊙ x) [+ s_in ⊙ x])`` as a single differentiable
+launch:
+
+* a **block-ELL adjacency** (``core.blocksparse.BlockEll``) plus its
+  **slot-compacted** view — row-major-sorted active-block lists whose Pallas
+  grid has exactly ``n_active`` steps instead of ``R × W`` padded ones;
+* a precompiled **transpose plan** (``Aᵀ`` tiles built alongside ``A``) that
+  powers a custom VJP, so ``executor="blockell"`` is differentiable and
+  training never silently falls back to ``segment_aggregate``;
+* **fused symmetric normalization + self-loop**: the GCN
+  scale → SpMM → add-loop → scale chain collapses into the kernel (scaling
+  vectors ride in VMEM tiles; the diagonal seeds the accumulator), so
+  ``models/gcn.py::_aggregate`` becomes one launch;
+* interchangeable **backends** — ``pallas`` (padded or compacted TPU
+  kernels), ``jnp`` (batched dense-tile einsum, the portable fallback), and
+  ``coo`` (a fully-fused sorted edge-list pass: normalization, mask, and
+  self-loop pre-folded into one weight vector — the strongest CPU executor);
+* an **autotuner** (:mod:`repro.exec.autotune`) that measures forward +
+  backward wall-clock over ``(backend, bm, bk, compaction)`` per graph,
+  replaces the static ``choose_block_shape`` heuristic, and caches verdicts
+  on disk keyed by a structural graph fingerprint.
+
+Plan modes map onto the model zoo: ``"gcn"`` (symmetric-normalized adjacency
+with analytic self-loop), ``"sum"`` (GIN), ``"mean"`` (GraphSAGE).  Build one
+with :func:`build_plan`, or let :func:`autotune_plan` measure and pick.
+"""
+from .plan import GraphExecutionPlan, build_plan
+from .autotune import (autotune, autotune_plan, graph_fingerprint,
+                       AutotuneRecord, default_candidates)

@@ -1,0 +1,178 @@
+"""Measure, don't guess: pick the aggregation engine by wall-clock.
+
+``choose_block_shape`` (core/blocksparse.py) sizes tiles from a VMEM budget
+without ever running anything.  This module replaces that heuristic with a
+micro-benchmark: for each candidate ``(backend, bm, bk, compact)`` it builds
+a :class:`GraphExecutionPlan`, times a jitted **forward + backward** pass
+(the training hot path, via ``jax.vjp``), and keeps the winner.  Verdicts are
+cached on disk keyed by a structural *graph fingerprint* plus the feature
+width, plan mode, and JAX backend, so a graph is only ever tuned once per
+machine — later sessions (and later PRs) pick an executor by measurement.
+
+Cache location: ``$REPRO_EXEC_CACHE`` or ``~/.cache/repro/exec``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.structure import Graph
+from .plan import GraphExecutionPlan, build_plan
+
+Candidate = Tuple[str, int, bool]   # (backend, bm==bk, compact)
+
+
+def default_candidates(platform: Optional[str] = None) -> List[Candidate]:
+    """Candidate grid per platform.  On TPU the MXU wants 128-aligned tiles;
+    on CPU small tiles keep the dense-tile FLOP overhead near nnz, and the
+    fused coo pass is always in the running."""
+    platform = platform or jax.default_backend()
+    if platform == "tpu":
+        return [("pallas", 128, True), ("pallas", 128, False),
+                ("pallas", 256, True), ("coo", 128, True)]
+    return [("coo", 128, True),
+            ("jnp", 16, True), ("jnp", 32, True), ("jnp", 64, True),
+            ("jnp", 128, True), ("jnp", 128, False)]
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Structural hash: node/edge counts + exact edge list + mask."""
+    h = hashlib.sha1()
+    h.update(np.int64(g.num_nodes).tobytes())
+    h.update(np.ascontiguousarray(g.src.astype(np.int64)).tobytes())
+    h.update(np.ascontiguousarray(g.dst.astype(np.int64)).tobytes())
+    if g.edge_mask is not None:
+        h.update(np.packbits(g.edge_mask).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneRecord:
+    key: str
+    backend: str
+    bm: int
+    compact: bool
+    us: float                      # winner's fwd+bwd microseconds
+    table: Tuple[Tuple[str, int, bool, float], ...]  # all measurements
+    from_cache: bool
+
+    def as_config(self) -> dict:
+        return {"backend": self.backend, "bm": self.bm, "bk": self.bm,
+                "compact": self.compact}
+
+
+# ------------------------------------------------------------------- cache
+def _cache_path(cache_dir: Optional[str]) -> str:
+    root = cache_dir or os.environ.get(
+        "REPRO_EXEC_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "exec"))
+    return os.path.join(root, "autotune.json")
+
+
+def _cache_load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _cache_store(path: str, entries: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(entries, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+# --------------------------------------------------------------- measuring
+def _time_fwd_bwd(plan: GraphExecutionPlan, x: jax.Array,
+                  iters: int = 3, warmup: int = 1) -> float:
+    """Median microseconds of one jitted forward+backward through the plan."""
+
+    @jax.jit
+    def step(x):
+        y, vjp = jax.vjp(plan.apply, x)
+        (dx,) = vjp(y)
+        return dx
+
+    for _ in range(warmup):
+        jax.block_until_ready(step(x))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(x))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def autotune(g: Graph, d: int, mode: str = "gcn", *,
+             candidates: Optional[Sequence[Candidate]] = None,
+             cache_dir: Optional[str] = None, force: bool = False,
+             iters: int = 3, seed: int = 0) -> AutotuneRecord:
+    """Measure the candidate grid on ``g`` and return the winner (cached)."""
+    platform = jax.default_backend()
+    cands = list(candidates or default_candidates(platform))
+    # the candidate set is part of the key: a cached verdict must never
+    # hand back a config the caller explicitly excluded
+    cand_sig = hashlib.sha1(repr(sorted(cands)).encode()).hexdigest()[:8]
+    key = f"{graph_fingerprint(g)}:{d}:{mode}:{platform}:{cand_sig}"
+    path = _cache_path(cache_dir)
+    entries = _cache_load(path)
+    if not force and key in entries:
+        e = entries[key]
+        return AutotuneRecord(key=key, backend=e["backend"], bm=e["bm"],
+                              compact=e["compact"], us=e["us"],
+                              table=tuple(tuple(r) for r in e.get("table", ())),
+                              from_cache=True)
+
+    x = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal((g.num_nodes, d)).astype(np.float32))
+    table: List[Tuple[str, int, bool, float]] = []
+    best: Optional[Tuple[float, Candidate]] = None
+    for backend, bm, compact in cands:
+        try:
+            plan = build_plan(g, mode, bm=bm, bk=bm, backend=backend,
+                              compact=compact)
+            us = _time_fwd_bwd(plan, x, iters=iters)
+        except Exception:     # a candidate failing to build/run just loses
+            continue
+        table.append((backend, bm, compact, us))
+        if best is None or us < best[0]:
+            best = (us, (backend, bm, compact))
+    if best is None:
+        raise RuntimeError("autotune: every candidate failed "
+                           f"(tried {cands})")
+    us, (backend, bm, compact) = best
+    try:
+        # re-read before writing so concurrent tuners of OTHER graphs
+        # don't have their fresh entries clobbered (per-key last-write wins)
+        entries = _cache_load(path)
+        entries[key] = {"backend": backend, "bm": bm, "compact": compact,
+                        "us": us, "table": table}
+        _cache_store(path, entries)
+    except OSError:
+        pass                  # read-only FS: tuning still works, just uncached
+    return AutotuneRecord(key=key, backend=backend, bm=bm, compact=compact,
+                          us=us, table=tuple(table), from_cache=False)
+
+
+def autotune_plan(g: Graph, d: int, mode: str = "gcn", *,
+                  candidates: Optional[Sequence[Candidate]] = None,
+                  cache_dir: Optional[str] = None, force: bool = False,
+                  iters: int = 3) -> Tuple[GraphExecutionPlan, AutotuneRecord]:
+    """Autotune then build the winning plan for ``g``."""
+    rec = autotune(g, d, mode, candidates=candidates, cache_dir=cache_dir,
+                   force=force, iters=iters)
+    plan = build_plan(g, mode, bm=rec.bm, bk=rec.bm, backend=rec.backend,
+                      compact=rec.compact)
+    return plan, rec

@@ -1,0 +1,357 @@
+"""GraphExecutionPlan — compile a Graph once, aggregate fast forever after.
+
+The plan owns both directions of the aggregation linear map
+
+    F(x)   = s_out ⊙ (A (s_in ⊙ x) [+ s_in ⊙ x])         (forward)
+    F*(g)  = s_in ⊙ (Aᵀ (s_out ⊙ g) [+ s_out ⊙ g])       (VJP wrt x)
+
+where A is the (masked, unweighted unless ``weighted=True``) adjacency and
+the bracketed term is the analytic self-loop.  Because F is linear, its VJP
+is the same fused op with Aᵀ and the scales swapped — so the backward pass
+runs through a *precompiled transpose block-ELL plan* instead of letting JAX
+transpose a gather/scatter graph.  ``jax.custom_vjp`` wires that in; both
+directions share one code path (``_run_side``).
+
+Modes (what s_in / s_out / the diagonal mean):
+
+    "gcn"  : s_in = s_out = rsqrt(deg + 1), diagonal ON — exactly
+             D^-1/2 (A + I) D^-1/2 x, the whole GCN ``_aggregate``.
+    "sum"  : s = 1, diagonal OFF — plain A x (GIN).
+    "mean" : s_in = 1, s_out = 1/max(deg, 1), diagonal OFF (GraphSAGE).
+
+Backends:
+
+    "pallas" : the block-ELL TPU kernels (kernels/spmm_blockell.py) —
+               compacted (grid = n_active) or padded (grid = R*W).
+    "jnp"    : batched dense-tile einsum over the same block structure —
+               portable, differentiable-by-construction, used for parity.
+    "coo"    : one segment-sum over dst-sorted edges whose weights pre-fold
+               normalization, edge mask, and self-loop — the fastest CPU
+               executor (no padded control steps, no elementwise pre/post).
+
+Rows whose destination block has no active slot are never visited by the
+compacted Pallas grid; the plan patches them with the analytic diagonal
+fallback outside the kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.structure import Graph
+from ..core.blocksparse import (BlockEll, build_blockell, transpose_graph,
+                                traffic_model)
+from ..kernels.spmm_blockell import spmm_blockell_fused, spmm_blockell_compact
+
+MODES = ("gcn", "sum", "mean")
+BACKENDS = ("pallas", "jnp", "coo")
+
+
+class SideMeta(NamedTuple):
+    """Static (hashable) facts one direction of the plan needs at trace time."""
+    backend: str
+    compact: bool
+    add_diag: bool
+    bm: int
+    bk: int
+    R: int
+    C: int
+    n_active: int
+    n: int            # num_nodes
+    interpret: bool
+
+
+# ---------------------------------------------------------------------------
+# one direction of the fused op, on any backend
+# ---------------------------------------------------------------------------
+def _run_side(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
+              ) -> jax.Array:
+    if meta.backend == "coo":
+        y = jax.ops.segment_sum(x[a["src"]] * a["w"][:, None], a["dst"],
+                                num_segments=meta.n)
+        if meta.add_diag:
+            # self-loop as an elementwise FMA (s_out*s_in per node) — far
+            # cheaper than scattering N extra diagonal edges
+            y = y + a["dvec"][:, None] * x
+        return y
+    if meta.backend == "jnp":
+        return _jnp_blocks(meta, a, x)
+    if meta.backend == "pallas":
+        return _pallas_blocks(meta, a, x)
+    raise ValueError(meta.backend)
+
+
+def _jnp_blocks(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
+                ) -> jax.Array:
+    n, d = x.shape
+    bm, bk, R, C = meta.bm, meta.bk, meta.R, meta.C
+    xs = x * a["s_in"][:, None]
+    xb = jnp.pad(xs, ((0, C * bk - n), (0, 0))).reshape(C, bk, d)
+    if meta.compact:
+        if meta.n_active:
+            tiles = xb[a["cols"]]                          # (n_active, bk, d)
+            prod = jnp.einsum("abk,akd->abd", a["blocks"], tiles)
+            y = jax.ops.segment_sum(prod, a["rows"], num_segments=R)
+            y = y.reshape(R * bm, d)[:n]
+        else:
+            y = jnp.zeros_like(xs)
+    else:
+        cols = a["block_cols"]
+        tiles = xb[jnp.maximum(cols, 0)]                   # (R, W, bk, d)
+        tiles = jnp.where((cols >= 0)[:, :, None, None], tiles, 0.0)
+        y = jnp.einsum("rwmk,rwkd->rmd", a["blocks"], tiles)
+        y = y.reshape(R * bm, d)[:n]
+    if meta.add_diag:
+        y = y + xs
+    return y * a["s_out"][:, None]
+
+
+def _pallas_blocks(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
+                   ) -> jax.Array:
+    n, d = x.shape
+    bm, bk, R, C = meta.bm, meta.bk, meta.R, meta.C
+    dp = -(-d // 128) * 128
+    xp = jnp.pad(x, ((0, C * bk - n), (0, dp - d)))
+    if meta.compact:
+        if meta.n_active == 0:
+            y = None
+        else:
+            y = spmm_blockell_compact(
+                a["rows"], a["cols"], a["blocks"], xp,
+                a["s_in2d"], a["s_out2d"], bm=bm, bk=bk, n_row_blocks=R,
+                add_diag=meta.add_diag, interpret=meta.interpret)
+        # destination blocks with no active slot were never written: patch
+        # with the analytic diagonal term (zero when there is no self-loop)
+        fb = (x * a["s_in"][:, None] * a["s_out"][:, None] if meta.add_diag
+              else jnp.zeros_like(x))
+        if y is None:
+            return fb
+        return jnp.where(a["node_active"][:, None], y[:n, :d], fb)
+    y = spmm_blockell_fused(
+        a["block_cols"], a["blocks"], xp, a["s_in2d"], a["s_out2d"],
+        bm=bm, bk=bk, add_diag=meta.add_diag, interpret=meta.interpret)
+    return y[:n, :d]
+
+
+# ---------------------------------------------------------------------------
+# the plan container
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class GraphExecutionPlan:
+    """Everything the hot path needs, compiled from a Graph once.
+
+    The block-ELL structures are built eagerly for the ``pallas``/``jnp``
+    backends (their side arrays come from the tiles) but **lazily** for
+    ``coo`` — the coo compute path only needs the sorted edge arrays, so a
+    Reddit-scale serve session should not pay two block-ELL constructions
+    just to make ``describe()`` possible."""
+
+    mode: str
+    backend: str
+    compact: bool
+    bm: int
+    bk: int
+    num_nodes: int
+    add_diag: bool
+    meta_fwd: SideMeta
+    meta_bwd: SideMeta
+    _fwd: Dict[str, jax.Array]
+    _bwd: Dict[str, jax.Array]
+    _ell: Optional[BlockEll] = dataclasses.field(default=None, repr=False)
+    _ell_t: Optional[BlockEll] = dataclasses.field(default=None, repr=False)
+    _g_adj: Optional[Graph] = dataclasses.field(default=None, repr=False)
+    _g_adj_t: Optional[Graph] = dataclasses.field(default=None, repr=False)
+    _storage: str = "auto"
+    _width: Optional[int] = None
+    _fn: Optional[Callable] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def ell(self) -> BlockEll:
+        if self._ell is None:
+            self._ell = build_blockell(self._g_adj, bm=self.bm, bk=self.bk,
+                                       width=self._width,
+                                       storage=self._storage)
+        return self._ell
+
+    @property
+    def ell_t(self) -> BlockEll:
+        if self._ell_t is None:
+            self._ell_t = build_blockell(self._g_adj_t, bm=self.bm,
+                                         bk=self.bk, storage=self._storage)
+        return self._ell_t
+
+    # ------------------------------------------------------------- execute
+    def apply(self, x: jax.Array) -> jax.Array:
+        """Differentiable fused aggregation; one launch on the hot path."""
+        if self._fn is None:
+            meta_f, meta_b = self.meta_fwd, self.meta_bwd
+            af, ab = self._fwd, self._bwd
+
+            @jax.custom_vjp
+            def f(x):
+                return _run_side(meta_f, af, x)
+
+            def fwd(x):
+                return f(x), None
+
+            def bwd(_, g):
+                return (_run_side(meta_b, ab, g),)
+
+            f.defvjp(fwd, bwd)
+            self._fn = f
+        return self._fn(x)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.apply(x)
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def n_active(self) -> int:
+        return self.ell.n_active
+
+    @property
+    def grid_size(self) -> int:
+        """Accumulation steps one forward launch performs: ``n_active`` for
+        the compacted grid, ``R * W`` for the padded one, nnz for coo."""
+        if self.backend == "coo":
+            return int(self._fwd["src"].shape[0])
+        if self.compact:
+            return self.ell.n_active
+        return self.ell.n_row_blocks * self.ell.width
+
+    def describe(self, d: int = 128) -> dict:
+        tm = traffic_model(self.ell, d)
+        return {
+            "mode": self.mode, "backend": self.backend,
+            "compact": self.compact, "bm": self.bm, "bk": self.bk,
+            "grid_size": self.grid_size,
+            "padded_grid_size": self.ell.n_row_blocks * self.ell.width,
+            "plan_bytes": self.ell.storage_bytes() + self.ell_t.storage_bytes(),
+            **tm,
+        }
+
+
+# ---------------------------------------------------------------------------
+# building
+# ---------------------------------------------------------------------------
+def _mode_scales(mode: str, g: Graph):
+    deg = g.in_degrees().astype(np.float32)
+    if mode == "gcn":
+        s = 1.0 / np.sqrt(np.maximum(deg + 1.0, 1.0))
+        return s, s, True
+    if mode == "sum":
+        ones = np.ones(g.num_nodes, np.float32)
+        return ones, ones, False
+    if mode == "mean":
+        return (np.ones(g.num_nodes, np.float32),
+                (1.0 / np.maximum(deg, 1.0)).astype(np.float32), False)
+    raise ValueError(f"unknown plan mode {mode!r}; expected one of {MODES}")
+
+
+def _pad_scale(s: np.ndarray, blocks: int, width: int) -> jnp.ndarray:
+    out = np.zeros(blocks * width, np.float32)
+    out[:s.shape[0]] = s
+    return jnp.asarray(out.reshape(blocks, width))
+
+
+def _side_arrays(ell: BlockEll, s_in: np.ndarray, s_out: np.ndarray,
+                 backend: str, compact: bool) -> Dict[str, jax.Array]:
+    R, C = ell.n_row_blocks, int(np.ceil(ell.num_nodes / ell.bk))
+    a: Dict[str, jax.Array] = {"s_in": jnp.asarray(s_in),
+                               "s_out": jnp.asarray(s_out)}
+    if backend == "pallas":
+        a["s_in2d"] = _pad_scale(s_in, C, ell.bk)
+        a["s_out2d"] = _pad_scale(s_out, R, ell.bm)
+    if compact:
+        comp = ell.compact(np.uint8 if ell.implicit and backend == "pallas"
+                           else np.float32)
+        a["rows"] = jnp.asarray(comp.rows)
+        a["cols"] = jnp.asarray(comp.cols)
+        a["blocks"] = jnp.asarray(comp.blocks if backend == "pallas"
+                                  else comp.blocks.astype(np.float32))
+        node_active = np.repeat(comp.row_active, ell.bm)[:ell.num_nodes]
+        a["node_active"] = jnp.asarray(node_active)
+    else:
+        a["block_cols"] = jnp.asarray(ell.block_cols)
+        dtype = np.uint8 if ell.implicit and backend == "pallas" else np.float32
+        a["blocks"] = jnp.asarray(ell.dense_blocks(dtype))
+    return a
+
+
+def _coo_arrays(g: Graph, s_in: np.ndarray, s_out: np.ndarray,
+                add_diag: bool, weighted: bool) -> Dict[str, jax.Array]:
+    valid = (g.edge_mask if g.edge_mask is not None
+             else np.ones(g.num_edges, bool))
+    src = g.src[valid].astype(np.int32)
+    dst = g.dst[valid].astype(np.int32)
+    w = s_out[dst] * s_in[src]
+    if weighted and g.edge_weight is not None:
+        w = w * g.edge_weight[valid]
+    order = np.argsort(dst, kind="stable")   # dst-major: scatter locality
+    out = {"src": jnp.asarray(src[order]), "dst": jnp.asarray(dst[order]),
+           "w": jnp.asarray(w[order].astype(np.float32))}
+    if add_diag:
+        out["dvec"] = jnp.asarray((s_out * s_in).astype(np.float32))
+    return out
+
+
+def build_plan(g: Graph, mode: str = "gcn", *,
+               bm: Optional[int] = None, bk: Optional[int] = None,
+               backend: Optional[str] = None, compact: bool = True,
+               storage: str = "auto", weighted: bool = False,
+               interpret: Optional[bool] = None,
+               width: Optional[int] = None) -> GraphExecutionPlan:
+    """Compile ``g`` into a :class:`GraphExecutionPlan`.
+
+    ``backend=None`` picks ``"pallas"`` on TPU and ``"coo"`` elsewhere (use
+    :func:`repro.exec.autotune_plan` to pick by measurement instead).  Square
+    blocks are required (the transpose plan reuses the same tiling).
+    """
+    bm = bm or 128
+    bk = bk or bm
+    if bm != bk:
+        raise ValueError("GraphExecutionPlan requires square blocks "
+                         f"(got bm={bm}, bk={bk})")
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "coo"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if weighted and mode != "sum":
+        raise ValueError("weighted adjacency only composes with mode='sum'")
+    interp = ((jax.default_backend() != "tpu") if interpret is None
+              else interpret)
+    s_in, s_out, add_diag = _mode_scales(mode, g)
+
+    g_adj = g if weighted else dataclasses.replace(g, edge_weight=None)
+    g_adj_t = transpose_graph(g_adj)
+
+    def meta_for(n_active: int) -> SideMeta:
+        R = int(np.ceil(g.num_nodes / bm))
+        return SideMeta(backend=backend, compact=compact, add_diag=add_diag,
+                        bm=bm, bk=bk, R=R, C=int(np.ceil(g.num_nodes / bk)),
+                        n_active=n_active, n=g.num_nodes, interpret=interp)
+
+    if backend == "coo":
+        # the coo path never touches tiles: defer block-ELL to first access
+        fwd = _coo_arrays(g_adj, s_in, s_out, add_diag, weighted)
+        bwd = _coo_arrays(g_adj_t, s_out, s_in, add_diag, weighted)
+        ell = ell_t = None
+        meta_f, meta_b = meta_for(0), meta_for(0)
+    else:
+        ell = build_blockell(g_adj, bm=bm, bk=bk, width=width,
+                             storage=storage)
+        ell_t = build_blockell(g_adj_t, bm=bm, bk=bk, storage=storage)
+        fwd = _side_arrays(ell, s_in, s_out, backend, compact)
+        bwd = _side_arrays(ell_t, s_out, s_in, backend, compact)
+        meta_f, meta_b = meta_for(ell.n_active), meta_for(ell_t.n_active)
+    return GraphExecutionPlan(
+        mode=mode, backend=backend, compact=compact, bm=bm, bk=bk,
+        num_nodes=g.num_nodes, add_diag=add_diag,
+        meta_fwd=meta_f, meta_bwd=meta_b, _fwd=fwd, _bwd=bwd,
+        _ell=ell, _ell_t=ell_t, _g_adj=g_adj, _g_adj_t=g_adj_t,
+        _storage=storage, _width=width)

@@ -1,2 +1,4 @@
 from . import ref
 from .ops import spmm, spmm_ref, embedding_bag, decode_attention, sddmm
+from .spmm_blockell import (spmm_blockell, spmm_blockell_fused,
+                            spmm_blockell_compact)

@@ -39,7 +39,8 @@ def spmm(ell, x: jax.Array, interpret: bool | None = None) -> jax.Array:
     interpret = (not _on_tpu()) if interpret is None else interpret
     n, d_orig = x.shape
     xp = _pad_to(_pad_to(x, ell.bk, 0), 128, 1)
-    y = _spmm_pallas(jnp.asarray(ell.block_cols), jnp.asarray(ell.blocks), xp,
+    y = _spmm_pallas(jnp.asarray(ell.block_cols),
+                     jnp.asarray(ell.dense_blocks()), xp,
                      bm=ell.bm, bk=ell.bk, interpret=interpret)
     return y[:n, :d_orig]
 
@@ -48,7 +49,8 @@ def spmm_ref(ell, x: jax.Array) -> jax.Array:
     n, d_orig = x.shape
     xp = _pad_to(x, ell.bk, 0)
     y = ref.spmm_blockell_ref(jnp.asarray(ell.block_cols),
-                              jnp.asarray(ell.blocks), xp, ell.bm, ell.bk)
+                              jnp.asarray(ell.dense_blocks()), xp,
+                              ell.bm, ell.bk)
     return y[:n, :d_orig]
 
 

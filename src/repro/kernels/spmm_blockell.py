@@ -1,22 +1,37 @@
-"""Block-ELL SpMM Pallas kernel — Rubik's aggregation engine on TPU.
+"""Block-ELL SpMM Pallas kernels — Rubik's aggregation engine on TPU.
 
 y = A @ x with A block-sparse in ELL format (see core/blocksparse.py).  After
 LSH reordering the adjacency concentrates near the diagonal, so each
-destination block touches few source blocks; this kernel
+destination block touches few source blocks; these kernels
 
-  * streams one (bk, d) source-feature tile from HBM into VMEM per ACTIVE
-    block and reuses it across the whole (bm) destination tile — the
+  * stream one (bk, d) source-feature tile from HBM into VMEM per ACTIVE
+    block and reuse it across the whole (bm) destination tile — the
     explicitly-managed analogue of the paper's per-PE G-D cache;
-  * runs the per-block (bm, bk) x (bk, d) product on the MXU
+  * run the per-block (bm, bk) x (bk, d) product on the MXU
     (128-aligned tiles, fp32 accumulation);
-  * predicated-skips inactive ELL slots (col == -1) with @pl.when — the
-    padding slots cost a control step but no FLOPs;
-  * uses scalar prefetch (PrefetchScalarGridSpec) so the x-tile index map
+  * use scalar prefetch (PrefetchScalarGridSpec) so the x-tile index map
     reads the ELL column table — the canonical Pallas gather pattern.
 
-Grid = (R, W): W (ELL width) iterates innermost, revisiting the same output
-block, which Pallas guarantees stays resident in VMEM; the accumulator never
-round-trips to HBM.
+Three variants:
+
+``spmm_blockell``          — the original padded kernel: grid (R, W),
+    predicated-skip of inactive slots (col == -1) with @pl.when.  Padding
+    slots cost a control step but no FLOPs.
+``spmm_blockell_fused``    — padded grid plus *fused symmetric scaling*:
+    computes  s_out ⊙ (A (s_in ⊙ x) [+ s_in ⊙ x])  in one launch.  The
+    scaling vectors live in VMEM tiles; the optional self-loop diagonal is
+    handled in the accumulator's init step, so a whole GCN
+    scale → SpMM → add-loop → scale chain is one kernel.
+``spmm_blockell_compact``  — the *slot-compacted* fused kernel: the grid
+    iterates only the ``n_active`` live blocks via scalar-prefetched
+    row-major-sorted (row, col) lists.  Skewed graphs whose hub rows inflate
+    the ELL width W no longer tax every other row with padded control steps;
+    the grid is exactly ``n_active`` (tests assert this).  Because the slot
+    list is row-major sorted, each output block is revisited on consecutive
+    steps only, so Pallas keeps the accumulator resident in VMEM.
+
+Destination blocks with zero active slots are never visited by the compacted
+grid; callers (repro.exec) fill those rows from the analytic diagonal term.
 """
 from __future__ import annotations
 
@@ -68,3 +83,157 @@ def spmm_blockell(block_cols: jax.Array, blocks: jax.Array, x: jax.Array,
         out_shape=jax.ShapeDtypeStruct((R * bm, d), x.dtype),
         interpret=interpret,
     )(block_cols, blocks, x)
+
+
+# ---------------------------------------------------------------------------
+# fused padded kernel: s_out ⊙ (A (s_in ⊙ x) [+ s_in ⊙ x]) in one launch
+# ---------------------------------------------------------------------------
+def _make_fused_kernel(W: int, add_diag: bool):
+    def kernel(cols_ref, adj_ref, x_ref, sin_ref, sout_ref, *rest):
+        if add_diag:
+            xd_ref, sind_ref, o_ref = rest
+        else:
+            (o_ref,) = rest
+        r = pl.program_id(0)
+        w = pl.program_id(1)
+
+        @pl.when(w == 0)
+        def _init():
+            if add_diag:
+                o_ref[...] = xd_ref[...] * sind_ref[0][:, None]
+            else:
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+        @pl.when(cols_ref[r, w] >= 0)
+        def _accum():
+            xs = x_ref[...] * sin_ref[0][:, None]
+            o_ref[...] += jnp.dot(adj_ref[0, 0].astype(jnp.float32), xs,
+                                  preferred_element_type=jnp.float32
+                                  ).astype(o_ref.dtype)
+
+        @pl.when(w == W - 1)
+        def _scale():
+            o_ref[...] *= sout_ref[0][:, None]
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "add_diag", "interpret"))
+def spmm_blockell_fused(block_cols: jax.Array, blocks: jax.Array,
+                        x: jax.Array, s_in: jax.Array, s_out: jax.Array,
+                        *, bm: int, bk: int, add_diag: bool,
+                        interpret: bool = False) -> jax.Array:
+    """Padded fused SpMM.  s_in: (C, bk); s_out: (R, bm); x: (C*bk, d).
+    With ``add_diag`` (requires bm == bk so a row tile of x is a block tile)
+    the self-loop term s_in ⊙ x seeds the accumulator.  Returns (R*bm, d).
+    """
+    R, W = block_cols.shape
+    d = x.shape[1]
+    if add_diag and bm != bk:
+        raise ValueError("add_diag requires square blocks (bm == bk)")
+    in_specs = [
+        pl.BlockSpec((1, 1, bm, bk), lambda r, w, cols: (r, w, 0, 0)),
+        pl.BlockSpec((bk, d),
+                     lambda r, w, cols: (jnp.maximum(cols[r, w], 0), 0)),
+        pl.BlockSpec((1, bk),
+                     lambda r, w, cols: (jnp.maximum(cols[r, w], 0), 0)),
+        pl.BlockSpec((1, bm), lambda r, w, cols: (r, 0)),
+    ]
+    operands = [blocks, x, s_in, s_out]
+    if add_diag:
+        in_specs += [pl.BlockSpec((bk, d), lambda r, w, cols: (r, 0)),
+                     pl.BlockSpec((1, bk), lambda r, w, cols: (r, 0))]
+        operands += [x, s_in]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R, W),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, d), lambda r, w, cols: (r, 0)),
+    )
+    return pl.pallas_call(
+        _make_fused_kernel(W, add_diag),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * bm, d), x.dtype),
+        interpret=interpret,
+    )(block_cols, *operands)
+
+
+# ---------------------------------------------------------------------------
+# slot-compacted fused kernel: grid = (n_active,), no padded control steps
+# ---------------------------------------------------------------------------
+def _make_compact_kernel(n_active: int, add_diag: bool):
+    def kernel(rows_ref, cols_ref, adj_ref, x_ref, sin_ref, sout_ref, *rest):
+        if add_diag:
+            xd_ref, sind_ref, o_ref = rest
+        else:
+            (o_ref,) = rest
+        i = pl.program_id(0)
+        r = rows_ref[i]
+        first = (i == 0) | (rows_ref[jnp.maximum(i - 1, 0)] != r)
+        last = ((i == n_active - 1)
+                | (rows_ref[jnp.minimum(i + 1, n_active - 1)] != r))
+
+        @pl.when(first)
+        def _init():
+            if add_diag:
+                o_ref[...] = xd_ref[...] * sind_ref[0][:, None]
+            else:
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+        xs = x_ref[...] * sin_ref[0][:, None]
+        o_ref[...] += jnp.dot(adj_ref[0].astype(jnp.float32), xs,
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+        @pl.when(last)
+        def _scale():
+            o_ref[...] *= sout_ref[0][:, None]
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "n_row_blocks", "add_diag",
+                                    "interpret"))
+def spmm_blockell_compact(rows: jax.Array, cols: jax.Array,
+                          blocks: jax.Array, x: jax.Array,
+                          s_in: jax.Array, s_out: jax.Array,
+                          *, bm: int, bk: int, n_row_blocks: int,
+                          add_diag: bool, interpret: bool = False
+                          ) -> jax.Array:
+    """Slot-compacted fused SpMM: the grid is exactly ``n_active`` steps.
+
+    rows / cols: (n_active,) int32 sorted row-major (core.BlockCompaction);
+    blocks: (n_active, bm, bk); x: (C*bk, d); s_in: (C, bk); s_out: (R, bm).
+    Returns (R*bm, d); rows whose destination block has no active slot are
+    left unwritten — repro.exec fills them with the diagonal fallback.
+    """
+    n_active = rows.shape[0]
+    R = n_row_blocks
+    d = x.shape[1]
+    if add_diag and bm != bk:
+        raise ValueError("add_diag requires square blocks (bm == bk)")
+    if n_active == 0:
+        raise ValueError("empty compaction; caller handles n_active == 0")
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda i, rows, cols: (i, 0, 0)),
+        pl.BlockSpec((bk, d), lambda i, rows, cols: (cols[i], 0)),
+        pl.BlockSpec((1, bk), lambda i, rows, cols: (cols[i], 0)),
+        pl.BlockSpec((1, bm), lambda i, rows, cols: (rows[i], 0)),
+    ]
+    operands = [blocks, x, s_in, s_out]
+    if add_diag:
+        in_specs += [pl.BlockSpec((bk, d), lambda i, rows, cols: (rows[i], 0)),
+                     pl.BlockSpec((1, bk), lambda i, rows, cols: (rows[i], 0))]
+        operands += [x, s_in]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_active,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, d), lambda i, rows, cols: (rows[i], 0)),
+    )
+    return pl.pallas_call(
+        _make_compact_kernel(n_active, add_diag),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * bm, d), x.dtype),
+        interpret=interpret,
+    )(rows, cols, *operands)

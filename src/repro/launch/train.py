@@ -29,13 +29,32 @@ def lm_reduced_driver(arch: str, steps: int, ckpt: str):
                lm_token_batches(cfg.vocab, 4, 64), steps=steps, ckpt_dir=ckpt)
 
 
-def gnn_driver(arch: str, steps: int, ckpt: str):
+def gnn_driver(arch: str, steps: int, ckpt: str, executor: str = "auto"):
     from ..graph import cora_like
     from ..core import minhash_reorder
     spec = get(arch)
     bundle = spec.bundle()
     g = cora_like().permute(minhash_reorder(cora_like()))
-    loss_fn_builder = bundle.loss_fn("full_graph_sm")
+    exec_plan = None
+    if bundle.arch == "gcn" and executor in ("auto", "blockell"):
+        # default hot path: the compiled block-ELL engine; "auto" lets the
+        # autotuner pick (backend, bm, compaction) by measured fwd+bwd time
+        from ..exec import autotune_plan, build_plan
+        if executor == "auto":
+            exec_plan, rec = autotune_plan(g, d=g.node_feat.shape[1],
+                                           mode="gcn")
+            print(f"exec autotune: {rec.backend} bm={rec.bm} "
+                  f"compact={rec.compact} {rec.us:.0f}us"
+                  f"{' (cached)' if rec.from_cache else ''}")
+        else:
+            exec_plan = build_plan(g, "gcn")
+    elif executor not in ("auto", "segment"):
+        print(f"executor={executor!r} unsupported for arch {arch}; "
+              "falling back to segment")
+    loss_fn_builder = bundle.loss_fn(
+        "full_graph_sm",
+        executor="blockell" if exec_plan is not None else "segment",
+        exec_plan=exec_plan)
     params = bundle.init_params(jax.random.PRNGKey(0), g.node_feat.shape[1])
     import numpy as np
     deg = g.in_degrees().astype(np.float32) + 1.0
@@ -79,6 +98,12 @@ def main(argv=None):
     ap.add_argument("--parts", type=int, default=None,
                     help="number of graph shards for --dist "
                          "(default: device count)")
+    ap.add_argument("--executor", default="auto",
+                    choices=["auto", "segment", "blockell"],
+                    help="GNN aggregation engine: 'blockell' compiles the "
+                         "graph into a fused repro.exec plan; 'auto' "
+                         "additionally autotunes (backend, block shape, "
+                         "compaction) and caches the verdict on disk")
     args = ap.parse_args(argv)
     spec = get(args.arch)
     if args.dist:
@@ -96,7 +121,11 @@ def main(argv=None):
         return
     driver = {"lm": lm_reduced_driver, "gnn": gnn_driver,
               "recsys": recsys_driver}[spec.family]
-    res = driver(args.arch, args.steps, args.ckpt)
+    if spec.family == "gnn":
+        res = driver(args.arch, args.steps, args.ckpt,
+                     executor=args.executor)
+    else:
+        res = driver(args.arch, args.steps, args.ckpt)
     print(f"{args.arch}: {res.steps} steps, loss "
           f"{res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
           f"{res.wall_time:.1f}s, stragglers={res.straggler_flags}")

@@ -6,7 +6,8 @@ Key Rubik integration: the symmetric normalization FACTORIZES into a source
 scale and a destination scale (1/sqrt(d_u) * 1/sqrt(d_v)), so the aggregation
 itself runs unweighted on pre-scaled features — which is exactly what the
 shared-set (G-C) computation-reuse plan requires (order-invariant, weightless
-reductions).  executor in {"segment", "shared", "blockell"}.
+reductions).  executor in {"segment", "shared", "blockell"}; "blockell" with
+a ``repro.exec.GraphExecutionPlan`` is the fused differentiable hot path.
 """
 from __future__ import annotations
 
@@ -28,7 +29,21 @@ def gcn_init(key, dims: Sequence[int], param_dtype=jnp.float32) -> Dict:
 
 
 def _aggregate(x, graph, executor: str, plan=None, ell=None):
-    """A_hat @ x with the chosen executor; self-loop added analytically."""
+    """A_hat @ x with the chosen executor; self-loop added analytically.
+
+    ``executor="blockell"`` with a ``repro.exec.GraphExecutionPlan`` (mode
+    "gcn") runs the whole chain — source scaling, SpMM, self-loop,
+    destination scaling — as ONE fused, differentiable launch; the legacy
+    dict-of-arrays form keeps the old unfused jnp tile path.
+    """
+    if executor == "blockell" and hasattr(ell, "apply"):
+        if ell.mode != "gcn":
+            raise ValueError(f"plan mode {ell.mode!r} != 'gcn'; build the "
+                             "plan with repro.exec.build_plan(g, 'gcn')")
+        if ell.num_nodes != x.shape[0]:
+            raise ValueError(f"plan compiled for {ell.num_nodes} nodes but "
+                             f"x has {x.shape[0]} rows (wrong graph?)")
+        return ell.apply(x)                 # fused A_hat @ x, custom VJP
     deg = graph["deg"]                      # (N,) in-degree + 1 (self loop)
     inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
     xs = x * inv_sqrt[:, None]              # source scaling

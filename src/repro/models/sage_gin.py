@@ -18,6 +18,15 @@ from ..core.aggregate import segment_aggregate, shared_aggregate
 
 
 def _agg(h, graph, op, executor="segment", plan=None):
+    if executor == "blockell" and hasattr(plan, "apply"):
+        # repro.exec.GraphExecutionPlan: fused block-ELL engine with a
+        # custom VJP — the plan's mode must match the requested reduction
+        if plan.mode != op:
+            raise ValueError(f"plan mode {plan.mode!r} != aggregation {op!r}")
+        if plan.num_nodes != h.shape[0]:
+            raise ValueError(f"plan compiled for {plan.num_nodes} nodes but "
+                             f"h has {h.shape[0]} rows (wrong graph?)")
+        return plan.apply(h)
     if executor == "shared" and plan is not None:
         return shared_aggregate(h, plan, op=op)
     return segment_aggregate(h, graph["src"], graph["dst"], h.shape[0], op=op,

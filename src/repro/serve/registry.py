@@ -82,11 +82,13 @@ class GNNSession:
 
     def __init__(self, name: str, g: Graph, kind: str,
                  hidden: int = 64, out_dim: int = 16, seed: int = 0,
-                 expander: str = "full", fanouts: Tuple[int, ...] = (10, 10)):
+                 expander: str = "full", fanouts: Tuple[int, ...] = (10, 10),
+                 executor: str = "blockell"):
         assert g.node_feat is not None
         self.name = name
         self.g = g
         self.kind = kind
+        self.executor = executor
         self.feats = np.asarray(g.node_feat, dtype=np.float32)
         d_in = self.feats.shape[1]
         self.dims = [d_in, hidden, out_dim]
@@ -103,6 +105,12 @@ class GNNSession:
         self._expander = (FullNeighborhood(g) if expander == "full"
                           else NeighborSampler(g, list(fanouts), seed=seed))
         self._layer_cache: Optional[List[np.ndarray]] = None
+        # the offline full-graph passes (oracle rows + warm payloads) run on
+        # the compiled block-ELL engine; "segment" keeps the reference path
+        self._plan = None
+        if executor == "blockell":
+            from ..exec import build_plan
+            self._plan = build_plan(g, "gcn" if kind == "gcn" else "mean")
 
     # ------------------------------------------------------------ geometry
     @property
@@ -167,7 +175,9 @@ class GNNSession:
         if self.kind == "gcn":
             graph = make_graph_inputs(self.g)
             for i, p in enumerate(self.params["layers"]):
-                h = linear_apply(p, _aggregate(h, graph, "segment"))
+                agg = (self._plan.apply(h) if self._plan is not None
+                       else _aggregate(h, graph, "segment"))
+                h = linear_apply(p, agg)
                 if i + 1 < L:
                     h = jax.nn.relu(h)
                 vals.append(np.asarray(h))
@@ -177,7 +187,8 @@ class GNNSession:
             if self.g.edge_mask is not None:
                 graph["edge_mask"] = jnp.asarray(self.g.edge_mask)
             for i, p in enumerate(self.params["layers"]):
-                nbr = _agg(h, graph, "mean")
+                nbr = (self._plan.apply(h) if self._plan is not None
+                       else _agg(h, graph, "mean"))
                 h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
                 if i + 1 < L:
                     h = jax.nn.relu(h)

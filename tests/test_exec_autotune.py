@@ -1,0 +1,86 @@
+"""exec.autotune: measurement-driven executor choice + disk cache round-trip."""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.graph import Graph
+from repro.exec import (autotune, autotune_plan, graph_fingerprint,
+                        default_candidates)
+
+CANDS = [("coo", 128, True), ("jnp", 32, True)]
+
+
+def _graph(n=220, e=1300, seed=0):
+    rng = np.random.default_rng(seed)
+    return Graph(src=rng.integers(0, n, e).astype(np.int32),
+                 dst=rng.integers(0, n, e).astype(np.int32), num_nodes=n)
+
+
+def test_autotune_cache_round_trip(tmp_path):
+    g = _graph()
+    rec1 = autotune(g, 16, "gcn", candidates=CANDS, cache_dir=str(tmp_path),
+                    iters=1)
+    assert not rec1.from_cache
+    assert (rec1.backend, rec1.bm, rec1.compact) in [
+        (b, bm, c) for b, bm, c in CANDS]
+    assert len(rec1.table) == len(CANDS)
+
+    rec2 = autotune(g, 16, "gcn", candidates=CANDS, cache_dir=str(tmp_path),
+                    iters=1)
+    assert rec2.from_cache
+    assert rec2.as_config() == rec1.as_config()
+    assert rec2.us == rec1.us
+
+    # the cache is a readable JSON document keyed by graph fingerprint
+    path = os.path.join(str(tmp_path), "autotune.json")
+    entries = json.load(open(path))
+    assert any(k.startswith(graph_fingerprint(g)) for k in entries)
+
+    # force=True re-measures and overwrites
+    rec3 = autotune(g, 16, "gcn", candidates=CANDS, cache_dir=str(tmp_path),
+                    iters=1, force=True)
+    assert not rec3.from_cache
+
+
+def test_autotune_key_depends_on_structure_and_width(tmp_path):
+    g1, g2 = _graph(seed=1), _graph(seed=2)
+    assert graph_fingerprint(g1) != graph_fingerprint(g2)
+    r1 = autotune(g1, 16, "gcn", candidates=CANDS, cache_dir=str(tmp_path),
+                  iters=1)
+    r_other_d = autotune(g1, 32, "gcn", candidates=CANDS,
+                         cache_dir=str(tmp_path), iters=1)
+    assert r1.key != r_other_d.key
+    assert not r_other_d.from_cache
+
+
+def test_autotune_corrupt_cache_recovers(tmp_path):
+    path = os.path.join(str(tmp_path), "autotune.json")
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write("{not json")
+    rec = autotune(_graph(), 16, "gcn", candidates=CANDS,
+                   cache_dir=str(tmp_path), iters=1)
+    assert not rec.from_cache
+    json.load(open(path))      # rewritten as valid JSON
+
+
+def test_autotune_plan_builds_winner(tmp_path):
+    g = _graph()
+    plan, rec = autotune_plan(g, 16, "gcn", candidates=CANDS,
+                              cache_dir=str(tmp_path), iters=1)
+    assert (plan.backend, plan.bm, plan.compact) == (rec.backend, rec.bm,
+                                                     rec.compact)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 16)).astype(np.float32))
+    assert np.asarray(plan.apply(x)).shape == (g.num_nodes, 16)
+
+
+def test_default_candidates_platforms():
+    cpu = default_candidates("cpu")
+    tpu = default_candidates("tpu")
+    assert any(b == "coo" for b, _, _ in cpu)
+    assert all(bm % 128 == 0 for _, bm, _ in tpu)   # MXU alignment
+    assert any(c is False for _, _, c in tpu)       # padded stays in the race
