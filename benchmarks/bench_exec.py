@@ -11,6 +11,13 @@ training hot path — through:
     on CPU typically the fused sorted-coo pass, on TPU the compacted
     Pallas kernel).
 
+It then benches WHOLE LAYERS (ISSUE 4): the autotuned
+``LayerExecutionPlan`` — joint (order, fuse, backend, block shape) space —
+against the PR 3 baseline of autotuned-graph-plan + separate update matmul,
+on both a shrinking (d_feat -> hidden) and a growing (hidden -> wide) layer
+shape, recording whether the measured computation order agrees with the
+FLOP/byte model.
+
 CPU wall-clock is meaningful for the jnp/coo paths; the Pallas kernels run
 interpret-mode here so only their *parity* is reported (the TPU win shows up
 as grid-size and HBM-traffic reductions, also emitted).  ``--quick`` trims
@@ -26,7 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import minhash_reorder
-from repro.exec import autotune_plan, build_plan
+from repro.exec import (autotune_plan, autotune_layer_plan, build_plan,
+                        build_layer_plan, choose_order)
 from repro.graph import cora_like
 from .common import dataset, emit, time_fn
 
@@ -58,19 +66,19 @@ def _plan_step(plan):
     return step
 
 
-def _time_interleaved(fns, x, iters: int):
-    """Median us per fn, calls interleaved round-robin so every contender
-    sees the same background load (these graphs are CPU-sized and a drifting
-    machine would otherwise decide the verdict)."""
+def _time_interleaved(fns, args, iters: int):
+    """Median us per fn over shared ``args``, calls interleaved round-robin
+    so every contender sees the same background load (these graphs are
+    CPU-sized and a drifting machine would otherwise decide the verdict)."""
     import time as _t
     for f in fns:
-        jax.block_until_ready(f(x))
-        jax.block_until_ready(f(x))
+        jax.block_until_ready(f(*args))
+        jax.block_until_ready(f(*args))
     ts = [[] for _ in fns]
     for _ in range(iters):
         for i, f in enumerate(fns):
             t0 = _t.perf_counter()
-            jax.block_until_ready(f(x))
+            jax.block_until_ready(f(*args))
             ts[i].append((_t.perf_counter() - t0) * 1e6)
     return [float(np.median(t)) for t in ts]
 
@@ -88,7 +96,7 @@ def _bench_graph(name: str, g, d: int, quick: bool, cache_dir: str) -> None:
     plan, rec = autotune_plan(g, d, "gcn", candidates=candidates,
                               cache_dir=cache_dir, iters=max(iters // 3, 2))
     plan_step = _plan_step(plan)
-    us_seg, us_plan = _time_interleaved([seg_step, plan_step], x, iters)
+    us_seg, us_plan = _time_interleaved([seg_step, plan_step], (x,), iters)
     emit(f"exec/segment_fwd_bwd_{name}", us_seg, "gather+segsum baseline",
          graph=name, d=d)
     info = plan.describe(d)
@@ -134,12 +142,125 @@ def _bench_graph(name: str, g, d: int, quick: bool, cache_dir: str) -> None:
              max_err=err, grid=pk.grid_size)
 
 
+def _layer_step(fn):
+    """Jitted fwd+bwd through a layer callable of (x, w, b)."""
+    @jax.jit
+    def step(x, w, b):
+        y, vjp = jax.vjp(fn, x, w, b)
+        return vjp(y)
+    return step
+
+
+def _bench_layer(name: str, g, shapes, quick: bool, cache_dir: str) -> None:
+    """Autotuned LayerExecutionPlan vs the PR 3 plan + separate-matmul
+    baseline, fwd+bwd, on shrinking and growing layer shapes."""
+    g = g.permute(minhash_reorder(g))
+    iters = 3 if quick else 15
+    on_cpu = jax.default_backend() != "tpu"
+    for d_in, d_out in shapes:
+        # CPU candidate sets are width-aware: the jnp dense-tile engine at a
+        # wide d (cora's 1433 features) costs seconds per call and can never
+        # win there — racing it would burn the whole bench budget
+        plan_cands = layer_cands = None
+        if on_cpu:
+            plan_cands = [("coo", 128, True)]
+            if d_in <= 256:
+                plan_cands.append(("jnp", 64, True))
+            layer_cands = [("aggregate_first", False, "coo", 128, True),
+                           ("update_first", False, "coo", 128, True)]
+            if not quick:
+                if d_out <= 256:
+                    layer_cands.append(
+                        ("update_first", False, "jnp", 64, True))
+                if d_in <= 256:
+                    layer_cands.append(
+                        ("aggregate_first", False, "jnp", 64, True))
+        shape = f"{d_in}x{d_out}"
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((g.num_nodes, d_in))
+                        .astype(np.float32))
+        w = jnp.asarray((rng.standard_normal((d_in, d_out))
+                         / np.sqrt(d_in)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal(d_out).astype(np.float32))
+
+        # PR 3 baseline: the autotuned AGGREGATION plan, then a separate
+        # update matmul with a full HBM round-trip between the two phases
+        gplan, _ = autotune_plan(g, d_in, "gcn", candidates=plan_cands,
+                                 cache_dir=cache_dir,
+                                 iters=max(iters // 3, 2))
+        base_step = _layer_step(
+            lambda x, w, b: jax.nn.relu(gplan.apply(x) @ w + b))
+
+        lp, rec = autotune_layer_plan(g, d_in, d_out, "gcn", relu=True,
+                                      candidates=layer_cands,
+                                      cache_dir=cache_dir,
+                                      iters=max(iters // 2, 3))
+        fused_step = _layer_step(
+            lambda x, w, b: lp.apply(x, w, b, relu=True))
+
+        us_base, us_fused = _time_interleaved(
+            [base_step, fused_step], (x, w, b), iters)
+        emit(f"exec/layer_pr3_fwd_bwd_{name}_{shape}", us_base,
+             f"{gplan.backend} aggregate + separate matmul",
+             graph=name, d_in=d_in, d_out=d_out)
+        model_order = choose_order(g.num_nodes, g.num_valid_edges,
+                                   d_in, d_out)
+        emit(f"exec/layer_fused_fwd_bwd_{name}_{shape}", us_fused,
+             f"order={rec.order} fuse={rec.fuse} {rec.backend} "
+             f"speedup_vs_pr3={us_base / max(us_fused, 1e-9):.2f}x "
+             f"model_agrees={rec.order == model_order}",
+             graph=name, d_in=d_in, d_out=d_out, order=rec.order,
+             fuse=rec.fuse, backend=rec.backend, bm=rec.bm,
+             compact=rec.compact, model_order=model_order,
+             order_agrees_with_model=rec.order == model_order,
+             speedup_vs_pr3=us_base / max(us_fused, 1e-9),
+             autotune_table=[list(r) for r in rec.table])
+
+        # parity: the fused layer must reproduce the PR 3 chain
+        err = float(jnp.abs(lp.apply(x, w, b, relu=True)
+                            - jax.nn.relu(gplan.apply(x) @ w + b)).max())
+        emit(f"exec/layer_parity_{name}_{shape}", 0.0,
+             f"max_err={err:.2e}", max_err=err)
+
+    if not quick and g.num_nodes <= 4000:
+        # one-launch Pallas layer kernels: interpret-mode parity on the
+        # smaller shape (padded and slot-compacted grids); interpret-mode
+        # cost scales with the grid, so only the small graph pays it
+        d_in, d_out = shapes[-1]
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((g.num_nodes, d_in))
+                        .astype(np.float32))
+        w = jnp.asarray((rng.standard_normal((d_in, d_out))
+                         / np.sqrt(d_in)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal(d_out).astype(np.float32))
+        ref_plan = build_plan(g, "gcn", bm=128, backend="coo")
+        ref = jax.nn.relu(ref_plan.apply(x) @ w + b)
+        for compact in (True, False):
+            pk = build_layer_plan(
+                g, "gcn", d_in=d_in, d_out=d_out, order="aggregate_first",
+                fuse=True, bm=128, backend="pallas", compact=compact)
+            err = float(jnp.abs(pk.apply(x, w, b, relu=True) - ref).max())
+            emit(f"exec/pallas_layer_kernel_parity_{name}_"
+                 f"{'compact' if compact else 'padded'}", 0.0,
+                 f"max_err={err:.2e} grid={pk.gplan.grid_size}",
+                 max_err=err, grid=pk.gplan.grid_size)
+
+
 def main(quick: bool = False) -> None:
     cache_dir = tempfile.mkdtemp(prefix="exec_autotune_")
-    _bench_graph("cora", cora_like(), 64 if quick else 128, quick, cache_dir)
+    cora = cora_like()
+    _bench_graph("cora", cora, 64 if quick else 128, quick, cache_dir)
+    # layer shapes: the real GCN-on-cora first layer (shrinking 1433->16)
+    # and a growing counterpart — the two regimes the order model must split
+    _bench_layer("cora", cora,
+                 [(cora.node_feat.shape[1], 16), (16, 128)],
+                 quick, cache_dir)
     if not quick:
-        _bench_graph("citeseer_s", dataset("CITESEER-S"), 128, quick,
-                     cache_dir)
+        cs = dataset("CITESEER-S")
+        _bench_graph("citeseer_s", cs, 128, quick, cache_dir)
+        _bench_layer("citeseer_s", cs,
+                     [(cs.node_feat.shape[1], 16), (16, 128)],
+                     quick, cache_dir)
 
 
 if __name__ == "__main__":

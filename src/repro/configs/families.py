@@ -272,11 +272,18 @@ class GNNBundle:
     def loss_fn(self, shape: str, executor: str = "segment",
                 exec_plan=None):
         """``executor="blockell"`` + a ``repro.exec.GraphExecutionPlan``
-        routes GCN aggregation through the fused block-ELL engine (the plan
-        is closed over; its custom VJP keeps the loss differentiable)."""
+        routes GCN aggregation through the fused block-ELL engine;
+        ``executor="fused"`` + a per-layer list of
+        ``repro.exec.LayerExecutionPlan`` folds the update matmul in too
+        (the plans are closed over; their custom VJPs keep the loss
+        differentiable)."""
         if executor == "blockell" and exec_plan is None:
             raise ValueError("executor='blockell' needs an exec_plan "
                              "(repro.exec.build_plan / autotune_plan)")
+        if executor == "fused" and not exec_plan:
+            raise ValueError("executor='fused' needs per-layer plans "
+                             "(repro.exec.build_layer_plan / "
+                             "autotune_layer_plan)")
         g = self.geometry(shape)
 
         def loss(params, batch):

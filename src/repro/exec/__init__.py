@@ -27,7 +27,20 @@ launch:
 Plan modes map onto the model zoo: ``"gcn"`` (symmetric-normalized adjacency
 with analytic self-loop), ``"sum"`` (GIN), ``"mean"`` (GraphSAGE).  Build one
 with :func:`build_plan`, or let :func:`autotune_plan` measure and pick.
+
+**Hierarchical layer fusion** (:class:`LayerExecutionPlan`): one level up,
+a whole GNN layer ``act(F(x) @ W + b)`` compiles into a single scheduled op.
+Because the aggregation ``F`` is linear, the plan picks the *computation
+order* — aggregate-then-update vs update-then-aggregate — from a FLOP/byte
+model of ``(n, E, d_in, d_out)`` (:func:`choose_order`), and on the Pallas
+backend in aggregate-first order it folds the update matmul (+bias+ReLU)
+into the SpMM epilogue so the ``(n, d_in)`` aggregation never round-trips
+through HBM.  :func:`autotune_layer` tunes order, fusion, backend, and block
+shape as one joint space in the same fingerprinted disk cache.
 """
-from .plan import GraphExecutionPlan, build_plan
-from .autotune import (autotune, autotune_plan, graph_fingerprint,
-                       AutotuneRecord, default_candidates)
+from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
+                   build_layer_plan, choose_order, layer_order_costs)
+from .autotune import (autotune, autotune_plan, autotune_layer,
+                       autotune_layer_plan, graph_fingerprint,
+                       AutotuneRecord, LayerAutotuneRecord,
+                       default_candidates, default_layer_candidates)

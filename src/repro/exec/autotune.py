@@ -9,6 +9,15 @@ cached on disk keyed by a structural *graph fingerprint* plus the feature
 width, plan mode, and JAX backend, so a graph is only ever tuned once per
 machine — later sessions (and later PRs) pick an executor by measurement.
 
+``autotune_layer`` extends the same machinery to WHOLE LAYERS (ISSUE 4): the
+candidate space becomes the joint ``(order, fuse, backend, bm, compact)``
+grid over a :class:`repro.exec.LayerExecutionPlan` — computation order
+(aggregate-then-update vs update-then-aggregate) and one-launch kernel
+fusion are tuned together with the aggregation engine, in the same
+fingerprinted disk cache.  The FLOP/byte model (:func:`repro.exec.plan.
+choose_order`) supplies the prior; the measurement validates or overrules it
+and the record keeps both verdicts.
+
 Cache location: ``$REPRO_EXEC_CACHE`` or ``~/.cache/repro/exec``.
 """
 from __future__ import annotations
@@ -18,7 +27,7 @@ import hashlib
 import json
 import os
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,9 +35,12 @@ import jax
 import jax.numpy as jnp
 
 from ..graph.structure import Graph
-from .plan import GraphExecutionPlan, build_plan
+from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
+                   build_layer_plan, choose_order)
 
 Candidate = Tuple[str, int, bool]   # (backend, bm==bk, compact)
+# (order, fuse, backend, bm==bk, compact) — the joint layer space
+LayerCandidate = Tuple[str, bool, str, int, bool]
 
 
 def default_candidates(platform: Optional[str] = None) -> List[Candidate]:
@@ -176,3 +188,195 @@ def autotune_plan(g: Graph, d: int, mode: str = "gcn", *,
     plan = build_plan(g, mode, bm=rec.bm, bk=rec.bm, backend=rec.backend,
                       compact=rec.compact)
     return plan, rec
+
+
+# ---------------------------------------------------------------------------
+# joint layer autotune: (order, fuse, backend, bm, compact) in one space
+# ---------------------------------------------------------------------------
+def default_layer_candidates(platform: Optional[str] = None,
+                             d_in: Optional[int] = None,
+                             d_out: Optional[int] = None
+                             ) -> List[LayerCandidate]:
+    """Joint candidate grid per platform.  ``fuse=True`` (the one-launch
+    Pallas layer kernel) only exists for pallas in aggregate-first order; the
+    CPU grid races both orders over the coo and jnp engines — but the jnp
+    dense-tile engine is width-gated: at a wide feature side (cora's 1433)
+    it costs seconds per call and can never win, so racing it would burn the
+    whole tuning budget."""
+    platform = platform or jax.default_backend()
+    if platform == "tpu":
+        return [("aggregate_first", True, "pallas", 128, True),
+                ("aggregate_first", True, "pallas", 128, False),
+                ("aggregate_first", False, "pallas", 128, True),
+                ("aggregate_first", True, "pallas", 256, True),
+                ("update_first", False, "pallas", 128, True),
+                ("update_first", False, "coo", 128, True)]
+    cands = [("aggregate_first", False, "coo", 128, True),
+             ("update_first", False, "coo", 128, True)]
+    if d_in is None or d_in <= 256:
+        cands.append(("aggregate_first", False, "jnp", 64, True))
+    if d_out is None or d_out <= 256:
+        cands.append(("update_first", False, "jnp", 64, True))
+    return cands
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerAutotuneRecord:
+    key: str
+    order: str
+    fuse: bool
+    backend: str
+    bm: int
+    compact: bool
+    us: float                      # winner's fwd+bwd microseconds
+    model_order: str               # what the FLOP/byte model predicted
+    table: Tuple[Tuple[str, bool, str, int, bool, float], ...]
+    from_cache: bool
+
+    @property
+    def order_agrees_with_model(self) -> bool:
+        return self.order == self.model_order
+
+    def as_config(self) -> dict:
+        return {"order": self.order, "fuse": self.fuse,
+                "backend": self.backend, "bm": self.bm, "bk": self.bm,
+                "compact": self.compact}
+
+
+def _time_layer_fwd_bwd(lp: LayerExecutionPlan, x: jax.Array, w: jax.Array,
+                        b: Optional[jax.Array], relu: bool,
+                        iters: int = 3, warmup: int = 1) -> float:
+    """Median microseconds of one jitted layer forward+backward (x, w, b)."""
+
+    if b is None:
+        @jax.jit
+        def step(x, w):
+            y, vjp = jax.vjp(lambda x, w: lp.apply(x, w, relu=relu), x, w)
+            return vjp(y)
+    else:
+        @jax.jit
+        def step(x, w, b):
+            y, vjp = jax.vjp(lambda x, w, b: lp.apply(x, w, b, relu=relu),
+                             x, w, b)
+            return vjp(y)
+    args = (x, w) if b is None else (x, w, b)
+    for _ in range(warmup):
+        jax.block_until_ready(step(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
+                   relu: bool = True, bias: bool = True,
+                   candidates: Optional[Sequence[LayerCandidate]] = None,
+                   cache_dir: Optional[str] = None, force: bool = False,
+                   iters: int = 3, seed: int = 0,
+                   _gplan_cache: Optional[Dict] = None) -> LayerAutotuneRecord:
+    """Measure the joint layer space on ``g`` and return the winner (cached).
+
+    Shares the graph-plan autotune's fingerprinted disk cache; keys carry the
+    layer shape, mode, epilogue flags, platform, and candidate signature."""
+    platform = jax.default_backend()
+    cands = list(candidates
+                 or default_layer_candidates(platform, d_in, d_out))
+    cand_sig = hashlib.sha1(repr(sorted(cands)).encode()).hexdigest()[:8]
+    model_order = choose_order(g.num_nodes, g.num_valid_edges, d_in, d_out)
+    key = (f"{graph_fingerprint(g)}:layer:{d_in}x{d_out}:{mode}:"
+           f"r{int(relu)}b{int(bias)}:{platform}:{cand_sig}")
+    path = _cache_path(cache_dir)
+    entries = _cache_load(path)
+    if not force and key in entries:
+        e = entries[key]
+        return LayerAutotuneRecord(
+            key=key, order=e["order"], fuse=e["fuse"], backend=e["backend"],
+            bm=e["bm"], compact=e["compact"], us=e["us"],
+            model_order=e.get("model_order", model_order),
+            table=tuple(tuple(r) for r in e.get("table", ())),
+            from_cache=True)
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((g.num_nodes, d_in))
+                    .astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((d_in, d_out)) / np.sqrt(d_in))
+                    .astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(d_out).astype(np.float32)) \
+        if bias else None
+    gplans: Dict[Tuple[str, int, bool], GraphExecutionPlan] = (
+        {} if _gplan_cache is None else _gplan_cache)
+    table: List[Tuple[str, bool, str, int, bool, float]] = []
+    best = None
+    for order, fuse, backend, bm, compact in cands:
+        try:
+            gkey = (backend, bm, compact)
+            if gkey not in gplans:
+                gplans[gkey] = build_plan(g, mode, bm=bm, bk=bm,
+                                          backend=backend, compact=compact)
+            lp = build_layer_plan(g, mode, d_in=d_in, d_out=d_out,
+                                  order=order, fuse=fuse,
+                                  gplan=gplans[gkey])
+            us = _time_layer_fwd_bwd(lp, x, w, b, relu, iters=iters)
+        except Exception:     # a candidate failing to build/run just loses
+            continue
+        table.append((order, fuse, backend, bm, compact, us))
+        if best is None or us < best[0]:
+            best = (us, (order, fuse, backend, bm, compact))
+    if best is None:
+        raise RuntimeError("autotune_layer: every candidate failed "
+                           f"(tried {cands})")
+    us, (order, fuse, backend, bm, compact) = best
+    if order != model_order:
+        # hysteresis toward the analytic prior: the measurement overrules
+        # the FLOP/byte model only when it is decisively (>10%) better —
+        # CPU-timer noise must not flip the computation order
+        contenders = [r for r in table if r[0] == model_order]
+        if contenders:
+            alt = min(contenders, key=lambda r: r[-1])
+            if alt[-1] <= us * 1.10:
+                order, fuse, backend, bm, compact, us = alt
+    try:
+        entries = _cache_load(path)
+        entries[key] = {"order": order, "fuse": fuse, "backend": backend,
+                        "bm": bm, "compact": compact, "us": us,
+                        "model_order": model_order, "table": table}
+        _cache_store(path, entries)
+    except OSError:
+        pass                  # read-only FS: tuning still works, just uncached
+    return LayerAutotuneRecord(key=key, order=order, fuse=fuse,
+                               backend=backend, bm=bm, compact=compact,
+                               us=us, model_order=model_order,
+                               table=tuple(table), from_cache=False)
+
+
+def autotune_layer_plan(g: Graph, d_in: int, d_out: int, mode: str = "gcn",
+                        *, relu: bool = True, bias: bool = True,
+                        candidates: Optional[Sequence[LayerCandidate]] = None,
+                        cache_dir: Optional[str] = None, force: bool = False,
+                        iters: int = 3,
+                        gplan: Optional[GraphExecutionPlan] = None
+                        ) -> Tuple[LayerExecutionPlan, LayerAutotuneRecord]:
+    """Autotune the joint space, then build the winning layer plan.
+
+    Pass ``gplan`` to reuse an existing graph plan when it already matches
+    the winning (mode, backend, bm, compact); graph plans built during an
+    uncached tuning run are reused too — the winner is never reconstructed
+    from scratch."""
+    built: Dict[Tuple[str, int, bool], GraphExecutionPlan] = {}
+    rec = autotune_layer(g, d_in, d_out, mode, relu=relu, bias=bias,
+                         candidates=candidates, cache_dir=cache_dir,
+                         force=force, iters=iters, _gplan_cache=built)
+    win = (rec.backend, rec.bm, rec.compact)
+    if gplan is not None and (
+            gplan.mode != mode
+            or (gplan.backend, gplan.bm, gplan.compact) != win):
+        gplan = None
+    if gplan is None:
+        gplan = built.get(win)
+    lp = build_layer_plan(g, mode, d_in=d_in, d_out=d_out, order=rec.order,
+                          fuse=rec.fuse, bm=rec.bm, bk=rec.bm,
+                          backend=rec.backend, compact=rec.compact,
+                          gplan=gplan)
+    return lp, rec

@@ -46,10 +46,14 @@ import jax.numpy as jnp
 from ..graph.structure import Graph
 from ..core.blocksparse import (BlockEll, build_blockell, transpose_graph,
                                 traffic_model)
-from ..kernels.spmm_blockell import spmm_blockell_fused, spmm_blockell_compact
+from ..kernels.spmm_blockell import (spmm_blockell_fused,
+                                     spmm_blockell_compact,
+                                     spmm_blockell_update,
+                                     spmm_blockell_update_compact)
 
 MODES = ("gcn", "sum", "mean")
 BACKENDS = ("pallas", "jnp", "coo")
+ORDERS = ("aggregate_first", "update_first")
 
 
 class SideMeta(NamedTuple):
@@ -186,6 +190,16 @@ class GraphExecutionPlan:
         return self._ell_t
 
     # ------------------------------------------------------------- execute
+    def raw_apply(self, x: jax.Array) -> jax.Array:
+        """One forward aggregation with NO custom VJP attached — the building
+        block :class:`LayerExecutionPlan` composes inside its own VJP."""
+        return _run_side(self.meta_fwd, self._fwd, x)
+
+    def raw_apply_t(self, g: jax.Array) -> jax.Array:
+        """One aggregation through the precompiled TRANSPOSE plan (``Aᵀ`` with
+        the scales swapped) — the cotangent hot path for layer plans."""
+        return _run_side(self.meta_bwd, self._bwd, g)
+
     def apply(self, x: jax.Array) -> jax.Array:
         """Differentiable fused aggregation; one launch on the hot path."""
         if self._fn is None:
@@ -355,3 +369,271 @@ def build_plan(g: Graph, mode: str = "gcn", *,
         meta_fwd=meta_f, meta_bwd=meta_b, _fwd=fwd, _bwd=bwd,
         _ell=ell, _ell_t=ell_t, _g_adj=g_adj, _g_adj_t=g_adj_t,
         _storage=storage, _width=width)
+
+
+# ===========================================================================
+# Hierarchical layer fusion (ISSUE 4): fold the node-level update matmul
+# into the graph-level aggregation, with computation-order selection.
+# ===========================================================================
+def layer_order_costs(n: int, e: int, d_in: int, d_out: int, *,
+                      bytes_per_el: int = 4, balance: float = 8.0) -> dict:
+    """FLOP/byte model of the two computation orders of one GNN layer.
+
+    A layer is ``act(F(x) @ W [+ b])`` with ``F`` the (linear) graph-level
+    aggregation; linearity means ``F(x) W == F(x W)``, so the scheduler may
+    run the SpMM at width ``d_in`` (aggregate-first) or ``d_out``
+    (update-first).  The update matmul costs the same either way — the
+    decision is purely which feature width the aggregation streams:
+
+        aggregate_first: spmm(d_in)  + matmul(n, d_in, d_out)
+        update_first:    matmul(n, d_in, d_out) + spmm(d_out)
+
+    Costs are byte-equivalents ``bytes + flops / balance`` (``balance`` =
+    flops-per-byte at the roofline ridge), so the verdict is the same on any
+    hardware whose ridge sits within a wide band; :mod:`repro.exec.autotune`
+    validates it by measurement anyway.
+    """
+    def spmm(d: int) -> float:
+        flops = 2.0 * e * d
+        bytes_ = (e * d + 2.0 * n * d) * bytes_per_el   # gathers + in/out rows
+        return bytes_ + flops / balance
+
+    matmul = ((n * d_in + n * d_out + d_in * d_out) * bytes_per_el
+              + 2.0 * n * d_in * d_out / balance)
+    return {"aggregate_first": spmm(d_in) + matmul,
+            "update_first": matmul + spmm(d_out)}
+
+
+def choose_order(n: int, e: int, d_in: int, d_out: int) -> str:
+    """Pick the computation order from the FLOP/byte model: shrinking layers
+    (``d_out < d_in``) aggregate fewer bytes after the update, growing layers
+    before it.  Ties go to aggregate-first, which is the fusable order."""
+    c = layer_order_costs(n, e, d_in, d_out)
+    return ("update_first" if c["update_first"] < c["aggregate_first"]
+            else "aggregate_first")
+
+
+def _pad128(d: int) -> int:
+    return -(-d // 128) * 128
+
+
+def _pallas_layer(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array,
+                  w: jax.Array, b: Optional[jax.Array], relu: bool
+                  ) -> jax.Array:
+    """One fused layer launch: SpMM + W-update epilogue (+bias/ReLU)."""
+    n, d_in = x.shape
+    d_out = w.shape[1]
+    bm, bk, R, C = meta.bm, meta.bk, meta.R, meta.C
+    dp_in, dp_out = _pad128(d_in), _pad128(d_out)
+    xp = jnp.pad(x, ((0, C * bk - n), (0, dp_in - d_in)))
+    wp = jnp.pad(w, ((0, dp_in - d_in), (0, dp_out - d_out)))
+    bp = (None if b is None
+          else jnp.pad(b, (0, dp_out - d_out)).reshape(1, dp_out))
+    if meta.compact:
+        y = None
+        if meta.n_active:
+            y = spmm_blockell_update_compact(
+                a["rows"], a["cols"], a["blocks"], xp, a["s_in2d"],
+                a["s_out2d"], wp, bp, bm=bm, bk=bk, n_row_blocks=R,
+                add_diag=meta.add_diag, relu=relu, interpret=meta.interpret)
+        # rows whose destination block has no active slot: the analytic
+        # diagonal term goes through the same update epilogue outside
+        fb = (x * (a["s_in"] * a["s_out"])[:, None] @ w if meta.add_diag
+              else jnp.zeros((n, d_out), x.dtype))
+        if b is not None:
+            fb = fb + b
+        if relu:
+            fb = jnp.maximum(fb, 0.0)
+        if y is None:
+            return fb
+        return jnp.where(a["node_active"][:, None], y[:n, :d_out], fb)
+    y = spmm_blockell_update(
+        a["block_cols"], a["blocks"], xp, a["s_in2d"], a["s_out2d"], wp, bp,
+        bm=bm, bk=bk, add_diag=meta.add_diag, relu=relu,
+        interpret=meta.interpret)
+    return y[:n, :d_out]
+
+
+@dataclasses.dataclass
+class LayerExecutionPlan:
+    """A whole GNN layer, compiled: aggregation ∘ update as one scheduled op.
+
+    ``apply(x, w, b, relu=...)`` computes ``act(F(x) @ w + b)`` where ``F``
+    is the owned :class:`GraphExecutionPlan`'s aggregation.  Because ``F`` is
+    linear the plan may evaluate it as ``act(F(x @ w) + b)`` instead
+    (``order="update_first"``) — chosen by :func:`choose_order` and validated
+    by :func:`repro.exec.autotune_layer` — and, on the Pallas backend in
+    aggregate-first order, runs SpMM + update + bias + ReLU as ONE launch
+    (``fuse=True``; kernels/spmm_blockell.py ``spmm_blockell_update*``).
+
+    The custom VJP runs ONE aggregation through the precompiled transpose
+    plan and mirrors the forward's computation order (``y = M x W + b``
+    either way, so both forms are exact):
+
+    * update-first / fused: ``h = Mᵀ ḡ`` (width ``d_out``), then
+      ``dx = h Wᵀ`` and ``dW = Σ_v x_v ⊗ h_v`` (a node-axis reduction);
+    * aggregate-first unfused: the forward's aggregation ``agg = M x`` is
+      the residual, then ``u = ḡ Wᵀ``, ``dx = Mᵀ u`` (width ``d_in``) and
+      ``dW = aggᵀ ḡ`` — the transpose SpMM always streams the NARROW side,
+      exactly like the forward.  ``db = Σ ḡ``; the backward never re-runs
+      the forward.
+    """
+
+    gplan: GraphExecutionPlan
+    d_in: int
+    d_out: int
+    order: str
+    fuse: bool
+    model_order: str = ""
+    _fns: Dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def mode(self) -> str:
+        return self.gplan.mode
+
+    @property
+    def backend(self) -> str:
+        return self.gplan.backend
+
+    @property
+    def num_nodes(self) -> int:
+        return self.gplan.num_nodes
+
+    def _layer_fn(self, has_bias: bool, relu: bool) -> Callable:
+        key = (has_bias, relu)
+        if key in self._fns:
+            return self._fns[key]
+        gp, order, fuse = self.gplan, self.order, self.fuse
+        meta_f, af = gp.meta_fwd, gp._fwd
+        meta_b, ab = gp.meta_bwd, gp._bwd
+
+        # the backward mirrors the forward's order so the transpose SpMM
+        # always streams the narrow feature side (see class docstring);
+        # fused layers keep no aggregation residual, so they use the
+        # d_out-side form
+        agg_residual = order == "aggregate_first" and not fuse
+
+        def post(y, b):
+            if b is not None:
+                y = y + b
+            return jnp.maximum(y, 0.0) if relu else y
+
+        def forward(x, w, b):
+            if fuse:
+                return _pallas_layer(meta_f, af, x, w, b, relu)
+            if order == "aggregate_first":
+                return post(_run_side(meta_f, af, x) @ w, b)
+            return post(_run_side(meta_f, af, x @ w), b)
+
+        def fwd_core(x, w, b):
+            if agg_residual:
+                agg = _run_side(meta_f, af, x)
+                y = post(agg @ w, b)
+                return y, (agg, w, y)
+            y = forward(x, w, b)
+            return y, (x, w, y)
+
+        def bwd_core(res, g):
+            lhs, w, y = res
+            if relu:
+                g = jnp.where(y > 0, g, 0.0)
+            if agg_residual:
+                # lhs = agg = M x: dx = Mᵀ (ḡ Wᵀ) runs at width d_in and
+                # dW = aggᵀ ḡ reuses the forward's aggregation
+                dx = _run_side(meta_b, ab, g @ w.T)
+                dw = jnp.einsum("nd,ne->de", lhs, g)
+            else:
+                # lhs = x: h = Mᵀ ḡ runs at width d_out, dW = Σ_v x_v ⊗ h_v
+                h = _run_side(meta_b, ab, g)
+                dx = h @ w.T
+                dw = jnp.einsum("nd,ne->de", lhs, h)
+            return g, dx, dw
+
+        if has_bias:
+            @jax.custom_vjp
+            def f(x, w, b):
+                return forward(x, w, b)
+
+            def fwd(x, w, b):
+                return fwd_core(x, w, b)
+
+            def bwd(res, g):
+                g, dx, dw = bwd_core(res, g)
+                return dx, dw, jnp.sum(g, axis=0)
+        else:
+            @jax.custom_vjp
+            def f(x, w):
+                return forward(x, w, None)
+
+            def fwd(x, w):
+                return fwd_core(x, w, None)
+
+            def bwd(res, g):
+                _, dx, dw = bwd_core(res, g)
+                return dx, dw
+
+        f.defvjp(fwd, bwd)
+        self._fns[key] = f
+        return f
+
+    def apply(self, x: jax.Array, w: jax.Array,
+              b: Optional[jax.Array] = None, *, relu: bool = False
+              ) -> jax.Array:
+        """Differentiable fused layer ``act(F(x) @ w + b)``."""
+        if x.shape[0] != self.num_nodes:
+            raise ValueError(f"plan compiled for {self.num_nodes} nodes but "
+                             f"x has {x.shape[0]} rows (wrong graph?)")
+        if w.shape != (self.d_in, self.d_out):
+            raise ValueError(f"layer plan compiled for W {self.d_in}x"
+                             f"{self.d_out}, got {w.shape}")
+        fn = self._layer_fn(b is not None, relu)
+        return fn(x, w) if b is None else fn(x, w, b)
+
+    def __call__(self, x, w, b=None, *, relu: bool = False) -> jax.Array:
+        return self.apply(x, w, b, relu=relu)
+
+    def describe(self) -> dict:
+        return {"order": self.order, "fuse": self.fuse,
+                "model_order": self.model_order,
+                "d_in": self.d_in, "d_out": self.d_out,
+                **self.gplan.describe(self.d_in if
+                                      self.order == "aggregate_first"
+                                      else self.d_out)}
+
+
+def build_layer_plan(g: Graph, mode: str = "gcn", *, d_in: int, d_out: int,
+                     order: str = "auto", fuse: Optional[bool] = None,
+                     bm: Optional[int] = None, bk: Optional[int] = None,
+                     backend: Optional[str] = None, compact: bool = True,
+                     storage: str = "auto", interpret: Optional[bool] = None,
+                     gplan: Optional[GraphExecutionPlan] = None
+                     ) -> LayerExecutionPlan:
+    """Compile one GNN layer of shape ``(d_in -> d_out)`` over ``g``.
+
+    ``order="auto"`` consults the FLOP/byte model; ``fuse=None`` turns the
+    one-launch Pallas layer kernel on exactly when it is applicable (pallas
+    backend, aggregate-first order).  Pass a prebuilt ``gplan`` to share one
+    block-ELL construction across the layers of a model.
+    """
+    model_order = choose_order(g.num_nodes, g.num_valid_edges, d_in, d_out)
+    if order in (None, "auto"):
+        order = model_order
+    if order not in ORDERS:
+        raise ValueError(f"unknown order {order!r}; expected {ORDERS}")
+    if gplan is None:
+        gplan = build_plan(g, mode, bm=bm, bk=bk, backend=backend,
+                           compact=compact, storage=storage,
+                           interpret=interpret)
+    elif gplan.mode != mode:
+        raise ValueError(f"prebuilt gplan has mode {gplan.mode!r}, layer "
+                         f"plan wants {mode!r}")
+    fusable = gplan.backend == "pallas" and order == "aggregate_first"
+    if fuse is None:
+        fuse = fusable
+    elif fuse and not fusable:
+        raise ValueError("fuse=True requires backend='pallas' and "
+                         f"order='aggregate_first' (got {gplan.backend!r}, "
+                         f"{order!r})")
+    return LayerExecutionPlan(gplan=gplan, d_in=d_in, d_out=d_out,
+                              order=order, fuse=fuse,
+                              model_order=model_order)

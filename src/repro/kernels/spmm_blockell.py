@@ -30,8 +30,17 @@ Three variants:
     list is row-major sorted, each output block is revisited on consecutive
     steps only, so Pallas keeps the accumulator resident in VMEM.
 
+``spmm_blockell_update`` / ``spmm_blockell_update_compact`` — the *layer*
+    kernels (hierarchical fusion, ISSUE 4): the graph-level aggregation
+    accumulates into a VMEM **scratch** tile and, on each destination block's
+    last slot, the epilogue multiplies the accumulated (bm, d_in) tile by the
+    resident update matrix ``W`` (d_in, d_out) on the MXU — optionally adding
+    bias and applying ReLU — before the single (bm, d_out) store.  A whole
+    GCN layer  relu(s_out ⊙ (A (s_in ⊙ x) [+ s_in ⊙ x]) @ W + b)  becomes ONE
+    launch: the (n, d_in) aggregation result never round-trips through HBM.
+
 Destination blocks with zero active slots are never visited by the compacted
-grid; callers (repro.exec) fill those rows from the analytic diagonal term.
+grids; callers (repro.exec) fill those rows from the analytic diagonal term.
 """
 from __future__ import annotations
 
@@ -235,5 +244,188 @@ def spmm_blockell_compact(rows: jax.Array, cols: jax.Array,
         _make_compact_kernel(n_active, add_diag),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R * bm, d), x.dtype),
+        interpret=interpret,
+    )(rows, cols, *operands)
+
+
+# ---------------------------------------------------------------------------
+# layer kernels: SpMM + node-level update (W, bias, ReLU) in one launch
+# ---------------------------------------------------------------------------
+def _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu):
+    """Shared epilogue: scale the accumulated tile, multiply by the resident
+    W tile on the MXU, add bias, apply ReLU — all in VMEM, then one store."""
+    y = acc_ref[...] * sout_ref[0][:, None]
+    out = jnp.dot(y, w_ref[...], preferred_element_type=jnp.float32)
+    if bias_ref is not None:
+        out = out + bias_ref[0][None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _make_update_kernel(n_slots: int, add_diag: bool, has_bias: bool,
+                        relu: bool):
+    def kernel(cols_ref, adj_ref, x_ref, sin_ref, sout_ref, w_ref, *rest):
+        rest = list(rest)
+        bias_ref = rest.pop(0) if has_bias else None
+        if add_diag:
+            xd_ref, sind_ref = rest.pop(0), rest.pop(0)
+        o_ref, acc_ref = rest
+        r = pl.program_id(0)
+        w = pl.program_id(1)
+
+        @pl.when(w == 0)
+        def _init():
+            if add_diag:
+                acc_ref[...] = xd_ref[...] * sind_ref[0][:, None]
+            else:
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        @pl.when(cols_ref[r, w] >= 0)
+        def _accum():
+            xs = x_ref[...] * sin_ref[0][:, None]
+            acc_ref[...] += jnp.dot(adj_ref[0, 0].astype(jnp.float32), xs,
+                                    preferred_element_type=jnp.float32)
+
+        @pl.when(w == n_slots - 1)
+        def _update():
+            _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu)
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "add_diag", "relu",
+                                    "interpret"))
+def spmm_blockell_update(block_cols: jax.Array, blocks: jax.Array,
+                         x: jax.Array, s_in: jax.Array, s_out: jax.Array,
+                         w: jax.Array, bias, *, bm: int, bk: int,
+                         add_diag: bool, relu: bool = False,
+                         interpret: bool = False) -> jax.Array:
+    """Padded fused LAYER: aggregation epilogue-multiplied by ``w`` in VMEM.
+
+    x: (C*bk, d_in); w: (d_in, d_out); bias: (1, d_out) or None; d_in and
+    d_out multiples of 128 (repro.exec pads).  The aggregation accumulates in
+    a VMEM scratch tile; only the (bm, d_out) updated tile is ever stored.
+    Returns (R*bm, d_out).
+    """
+    R, W = block_cols.shape
+    d_in, d_out = w.shape
+    if add_diag and bm != bk:
+        raise ValueError("add_diag requires square blocks (bm == bk)")
+    in_specs = [
+        pl.BlockSpec((1, 1, bm, bk), lambda r, s, cols: (r, s, 0, 0)),
+        pl.BlockSpec((bk, d_in),
+                     lambda r, s, cols: (jnp.maximum(cols[r, s], 0), 0)),
+        pl.BlockSpec((1, bk),
+                     lambda r, s, cols: (jnp.maximum(cols[r, s], 0), 0)),
+        pl.BlockSpec((1, bm), lambda r, s, cols: (r, 0)),
+        pl.BlockSpec((d_in, d_out), lambda r, s, cols: (0, 0)),
+    ]
+    operands = [blocks, x, s_in, s_out, w]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, d_out), lambda r, s, cols: (0, 0)))
+        operands.append(bias)
+    if add_diag:
+        in_specs += [pl.BlockSpec((bk, d_in), lambda r, s, cols: (r, 0)),
+                     pl.BlockSpec((1, bk), lambda r, s, cols: (r, 0))]
+        operands += [x, s_in]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R, W),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, d_out), lambda r, s, cols: (r, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, d_in), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_update_kernel(W, add_diag, bias is not None, relu),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * bm, d_out), x.dtype),
+        interpret=interpret,
+    )(block_cols, *operands)
+
+
+def _make_update_compact_kernel(n_active: int, add_diag: bool, has_bias: bool,
+                                relu: bool):
+    def kernel(rows_ref, cols_ref, adj_ref, x_ref, sin_ref, sout_ref, w_ref,
+               *rest):
+        rest = list(rest)
+        bias_ref = rest.pop(0) if has_bias else None
+        if add_diag:
+            xd_ref, sind_ref = rest.pop(0), rest.pop(0)
+        o_ref, acc_ref = rest
+        i = pl.program_id(0)
+        r = rows_ref[i]
+        first = (i == 0) | (rows_ref[jnp.maximum(i - 1, 0)] != r)
+        last = ((i == n_active - 1)
+                | (rows_ref[jnp.minimum(i + 1, n_active - 1)] != r))
+
+        @pl.when(first)
+        def _init():
+            if add_diag:
+                acc_ref[...] = xd_ref[...] * sind_ref[0][:, None]
+            else:
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        xs = x_ref[...] * sin_ref[0][:, None]
+        acc_ref[...] += jnp.dot(adj_ref[0].astype(jnp.float32), xs,
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(last)
+        def _update():
+            _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu)
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "n_row_blocks", "add_diag",
+                                    "relu", "interpret"))
+def spmm_blockell_update_compact(rows: jax.Array, cols: jax.Array,
+                                 blocks: jax.Array, x: jax.Array,
+                                 s_in: jax.Array, s_out: jax.Array,
+                                 w: jax.Array, bias, *, bm: int, bk: int,
+                                 n_row_blocks: int, add_diag: bool,
+                                 relu: bool = False,
+                                 interpret: bool = False) -> jax.Array:
+    """Slot-compacted fused LAYER: grid is exactly ``n_active`` steps and each
+    destination block's last step runs the W-update epilogue before its one
+    (bm, d_out) store.  Rows whose destination block has no active slot are
+    left unwritten — repro.exec fills them with the diagonal-term update.
+    """
+    n_active = rows.shape[0]
+    R = n_row_blocks
+    d_in, d_out = w.shape
+    if add_diag and bm != bk:
+        raise ValueError("add_diag requires square blocks (bm == bk)")
+    if n_active == 0:
+        raise ValueError("empty compaction; caller handles n_active == 0")
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda i, rows, cols: (i, 0, 0)),
+        pl.BlockSpec((bk, d_in), lambda i, rows, cols: (cols[i], 0)),
+        pl.BlockSpec((1, bk), lambda i, rows, cols: (cols[i], 0)),
+        pl.BlockSpec((1, bm), lambda i, rows, cols: (rows[i], 0)),
+        pl.BlockSpec((d_in, d_out), lambda i, rows, cols: (0, 0)),
+    ]
+    operands = [blocks, x, s_in, s_out, w]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, d_out),
+                                     lambda i, rows, cols: (0, 0)))
+        operands.append(bias)
+    if add_diag:
+        in_specs += [pl.BlockSpec((bk, d_in),
+                                  lambda i, rows, cols: (rows[i], 0)),
+                     pl.BlockSpec((1, bk), lambda i, rows, cols: (rows[i], 0))]
+        operands += [x, s_in]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_active,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, d_out), lambda i, rows, cols: (rows[i], 0)),
+        scratch_shapes=[pltpu.VMEM((bm, d_in), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_update_compact_kernel(n_active, add_diag, bias is not None,
+                                    relu),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * bm, d_out), x.dtype),
         interpret=interpret,
     )(rows, cols, *operands)

@@ -36,25 +36,47 @@ def gnn_driver(arch: str, steps: int, ckpt: str, executor: str = "auto"):
     bundle = spec.bundle()
     g = cora_like().permute(minhash_reorder(cora_like()))
     exec_plan = None
-    if bundle.arch == "gcn" and executor in ("auto", "blockell"):
-        # default hot path: the compiled block-ELL engine; "auto" lets the
-        # autotuner pick (backend, bm, compaction) by measured fwd+bwd time
-        from ..exec import autotune_plan, build_plan
-        if executor == "auto":
-            exec_plan, rec = autotune_plan(g, d=g.node_feat.shape[1],
-                                           mode="gcn")
-            print(f"exec autotune: {rec.backend} bm={rec.bm} "
-                  f"compact={rec.compact} {rec.us:.0f}us"
-                  f"{' (cached)' if rec.from_cache else ''}")
-        else:
-            exec_plan = build_plan(g, "gcn")
+    layer_plans = None
+    if bundle.arch == "gcn" and executor in ("auto", "fused"):
+        # default hot path: hierarchical layer fusion — each layer is one
+        # LayerExecutionPlan; "auto" autotunes the joint (order, fuse,
+        # backend, block shape, compaction) space per layer shape and caches
+        # the verdicts on disk, "fused" trusts the FLOP/byte order model
+        from ..exec import autotune_layer_plan, build_layer_plan
+        dims = [g.node_feat.shape[1], *bundle.model_kw["hidden"],
+                bundle.n_classes]
+        n_layers = len(dims) - 1
+        layer_plans, gplan = [], None
+        for i in range(n_layers):
+            if executor == "auto":
+                lp, rec = autotune_layer_plan(
+                    g, dims[i], dims[i + 1], "gcn", relu=i + 1 < n_layers,
+                    gplan=gplan)
+                print(f"layer {i} ({dims[i]}->{dims[i + 1]}) autotune: "
+                      f"order={rec.order} fuse={rec.fuse} {rec.backend} "
+                      f"bm={rec.bm} compact={rec.compact} {rec.us:.0f}us "
+                      f"model_order={rec.model_order}"
+                      f"{' (cached)' if rec.from_cache else ''}")
+            else:
+                lp = build_layer_plan(g, "gcn", d_in=dims[i],
+                                      d_out=dims[i + 1], gplan=gplan)
+            gplan = lp.gplan
+            layer_plans.append(lp)
+    elif bundle.arch == "gcn" and executor == "blockell":
+        # the PR 3 path: fused aggregation, separate update matmul
+        from ..exec import build_plan
+        exec_plan = build_plan(g, "gcn")
     elif executor not in ("auto", "segment"):
         print(f"executor={executor!r} unsupported for arch {arch}; "
               "falling back to segment")
-    loss_fn_builder = bundle.loss_fn(
-        "full_graph_sm",
-        executor="blockell" if exec_plan is not None else "segment",
-        exec_plan=exec_plan)
+    if layer_plans is not None:
+        loss_fn_builder = bundle.loss_fn("full_graph_sm", executor="fused",
+                                         exec_plan=layer_plans)
+    else:
+        loss_fn_builder = bundle.loss_fn(
+            "full_graph_sm",
+            executor="blockell" if exec_plan is not None else "segment",
+            exec_plan=exec_plan)
     params = bundle.init_params(jax.random.PRNGKey(0), g.node_feat.shape[1])
     import numpy as np
     deg = g.in_degrees().astype(np.float32) + 1.0
@@ -99,11 +121,15 @@ def main(argv=None):
                     help="number of graph shards for --dist "
                          "(default: device count)")
     ap.add_argument("--executor", default="auto",
-                    choices=["auto", "segment", "blockell"],
-                    help="GNN aggregation engine: 'blockell' compiles the "
-                         "graph into a fused repro.exec plan; 'auto' "
-                         "additionally autotunes (backend, block shape, "
-                         "compaction) and caches the verdict on disk")
+                    choices=["auto", "segment", "blockell", "fused"],
+                    help="GNN execution engine: 'fused' compiles each layer "
+                         "into a repro.exec LayerExecutionPlan (aggregation "
+                         "+ update matmul as one scheduled op, computation "
+                         "order from the FLOP/byte model); 'auto' "
+                         "additionally autotunes the joint (order, fusion, "
+                         "backend, block shape, compaction) space per layer "
+                         "and caches verdicts on disk; 'blockell' keeps the "
+                         "PR 3 aggregation-only plan + separate matmul")
     args = ap.parse_args(argv)
     spec = get(args.arch)
     if args.dist:

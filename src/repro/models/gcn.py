@@ -6,8 +6,11 @@ Key Rubik integration: the symmetric normalization FACTORIZES into a source
 scale and a destination scale (1/sqrt(d_u) * 1/sqrt(d_v)), so the aggregation
 itself runs unweighted on pre-scaled features — which is exactly what the
 shared-set (G-C) computation-reuse plan requires (order-invariant, weightless
-reductions).  executor in {"segment", "shared", "blockell"}; "blockell" with
-a ``repro.exec.GraphExecutionPlan`` is the fused differentiable hot path.
+reductions).  executor in {"segment", "shared", "blockell", "fused"}:
+"blockell" with a ``repro.exec.GraphExecutionPlan`` runs the aggregation as
+one fused differentiable launch; "fused" goes one level further — each layer
+is a ``repro.exec.LayerExecutionPlan`` call, so aggregation AND the update
+matmul (+bias+ReLU) are one scheduled op with autotuned computation order.
 """
 from __future__ import annotations
 
@@ -62,11 +65,38 @@ def _aggregate(x, graph, executor: str, plan=None, ell=None):
     return agg * inv_sqrt[:, None]          # destination scaling
 
 
+def _layer_plans_for(ell, params, mode: str):
+    """Validate a per-layer ``repro.exec.LayerExecutionPlan`` sequence."""
+    layers = params["layers"]
+    plans = list(ell) if isinstance(ell, (list, tuple)) else None
+    if plans is None or len(plans) != len(layers) or not all(
+            hasattr(lp, "apply") and hasattr(lp, "order") for lp in plans):
+        raise ValueError(
+            "executor='fused' needs one repro.exec.LayerExecutionPlan per "
+            f"layer ({len(layers)} layers; got {type(ell).__name__})")
+    for lp in plans:
+        if lp.mode != mode:
+            raise ValueError(f"layer plan mode {lp.mode!r} != {mode!r}; "
+                             f"build with repro.exec.build_layer_plan(g, "
+                             f"{mode!r}, ...)")
+    return plans
+
+
 def gcn_apply(params, x: jax.Array, graph: Dict[str, Any],
               executor: str = "segment", plan=None, ell=None,
               act=jax.nn.relu) -> jax.Array:
     h = x
     n_layers = len(params["layers"])
+    if executor == "fused":
+        # hierarchical fusion: each layer (aggregate + update + bias + ReLU)
+        # is ONE LayerExecutionPlan call with autotuned computation order
+        if act is not jax.nn.relu:
+            raise ValueError("executor='fused' layer plans only fuse ReLU; "
+                             "use another executor for a custom activation")
+        for i, (p, lp) in enumerate(zip(params["layers"],
+                                        _layer_plans_for(ell, params, "gcn"))):
+            h = lp.apply(h, p["w"], p.get("b"), relu=i + 1 < n_layers)
+        return h
     for i, p in enumerate(params["layers"]):
         h = _aggregate(h, graph, executor, plan, ell)
         h = linear_apply(p, h)

@@ -4,7 +4,10 @@ evaluation models (§V-A, PyG defaults: SAGE 2x sageConv h=256; GIN 5 conv +
 
 Both expose an ``executor`` switch so the Rubik scheduling strategies
 (Index / LR / LR&CR) run through identical model code — the Fig. 8/9
-benchmarks flip only the plan.
+benchmarks flip only the plan.  ``executor="fused"`` (SAGE) takes ``plan`` as
+a per-layer list of ``repro.exec.LayerExecutionPlan``: the neighbor half of
+each SAGE matmul folds into the graph-level aggregation with autotuned
+computation order.
 """
 from __future__ import annotations
 
@@ -47,8 +50,19 @@ def sage_apply(params, x, graph, executor="segment", plan=None,
     h = x
     L = len(params["layers"])
     for i, p in enumerate(params["layers"]):
-        nbr = _agg(h, graph, "mean", executor, plan)
-        h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
+        if executor == "fused":
+            # layer plans (repro.exec.LayerExecutionPlan, mode "mean"), one
+            # per layer: W splits into its self and neighbor halves, so
+            #   concat(h, mean_N(h)) @ W + b == h @ W_self + F(h) @ W_nbr + b
+            # and the neighbor half is one fused, order-autotuned plan call
+            lp = plan[i]
+            if lp.mode != "mean":
+                raise ValueError(f"layer plan mode {lp.mode!r} != 'mean'")
+            d_self = p["w"].shape[0] // 2
+            h = h @ p["w"][:d_self] + lp.apply(h, p["w"][d_self:], p.get("b"))
+        else:
+            nbr = _agg(h, graph, "mean", executor, plan)
+            h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
         if i + 1 < L:
             h = act(h)
         # L2 normalize as in the paper

@@ -83,7 +83,7 @@ class GNNSession:
     def __init__(self, name: str, g: Graph, kind: str,
                  hidden: int = 64, out_dim: int = 16, seed: int = 0,
                  expander: str = "full", fanouts: Tuple[int, ...] = (10, 10),
-                 executor: str = "blockell"):
+                 executor: str = "fused"):
         assert g.node_feat is not None
         self.name = name
         self.g = g
@@ -106,11 +106,23 @@ class GNNSession:
                           else NeighborSampler(g, list(fanouts), seed=seed))
         self._layer_cache: Optional[List[np.ndarray]] = None
         # the offline full-graph passes (oracle rows + warm payloads) run on
-        # the compiled block-ELL engine; "segment" keeps the reference path
+        # the compiled exec engines; "segment" keeps the reference path.
+        # "fused" (default) compiles ONE LayerExecutionPlan per layer — the
+        # same layer plans the training executor uses, with computation
+        # order picked by the FLOP/byte model — all sharing one graph plan.
+        mode = "gcn" if kind == "gcn" else "mean"
         self._plan = None
-        if executor == "blockell":
+        self._layer_plans = None
+        if executor == "fused":
+            from ..exec import build_plan, build_layer_plan
+            gplan = build_plan(g, mode)
+            self._layer_plans = [
+                build_layer_plan(g, mode, d_in=self.dims[i],
+                                 d_out=self.dims[i + 1], gplan=gplan)
+                for i in range(len(self.dims) - 1)]
+        elif executor == "blockell":
             from ..exec import build_plan
-            self._plan = build_plan(g, "gcn" if kind == "gcn" else "mean")
+            self._plan = build_plan(g, mode)
 
     # ------------------------------------------------------------ geometry
     @property
@@ -165,21 +177,27 @@ class GNNSession:
         """Offline full-graph forward (the reference executors, *not* the
         serving path), capturing each layer's output as the next layer
         consumes it — post-activation for non-final layers.  These are the
-        oracle rows and the payloads ``warm`` preloads."""
+        oracle rows and the payloads ``warm`` preloads.  With the default
+        ``executor="fused"`` each layer is one LayerExecutionPlan call — the
+        oracle is produced by the very plans the training path runs."""
         from ..models.gcn import _aggregate
         from ..models.sage_gin import _agg
 
         h = jnp.asarray(self.feats)
         vals = [self.feats]
         L = self.num_layers
+        lps = self._layer_plans
         if self.kind == "gcn":
             graph = make_graph_inputs(self.g)
             for i, p in enumerate(self.params["layers"]):
-                agg = (self._plan.apply(h) if self._plan is not None
-                       else _aggregate(h, graph, "segment"))
-                h = linear_apply(p, agg)
-                if i + 1 < L:
-                    h = jax.nn.relu(h)
+                if lps is not None:
+                    h = lps[i].apply(h, p["w"], p.get("b"), relu=i + 1 < L)
+                else:
+                    agg = (self._plan.apply(h) if self._plan is not None
+                           else _aggregate(h, graph, "segment"))
+                    h = linear_apply(p, agg)
+                    if i + 1 < L:
+                        h = jax.nn.relu(h)
                 vals.append(np.asarray(h))
         else:
             graph = {"src": jnp.asarray(self.g.src),
@@ -187,9 +205,14 @@ class GNNSession:
             if self.g.edge_mask is not None:
                 graph["edge_mask"] = jnp.asarray(self.g.edge_mask)
             for i, p in enumerate(self.params["layers"]):
-                nbr = (self._plan.apply(h) if self._plan is not None
-                       else _agg(h, graph, "mean"))
-                h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
+                if lps is not None:
+                    d_self = p["w"].shape[0] // 2
+                    h = (h @ p["w"][:d_self]
+                         + lps[i].apply(h, p["w"][d_self:], p.get("b")))
+                else:
+                    nbr = (self._plan.apply(h) if self._plan is not None
+                           else _agg(h, graph, "mean"))
+                    h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
                 if i + 1 < L:
                     h = jax.nn.relu(h)
                 h = h / jnp.maximum(

@@ -72,6 +72,70 @@ def test_lsh_reorder_jax_matches_permutation(community_graph):
     assert sorted(perm.tolist()) == list(range(g.num_nodes))
 
 
+def test_lsh_reorder_jax_respects_edge_mask():
+    """Masked (padding) edges must not influence the buckets: the masked
+    graph buckets exactly like the pre-filtered one (same seed, same r)."""
+    rng = np.random.default_rng(5)
+    n, e = 120, 400
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    mask = rng.random(e) < 0.6
+    with_mask = np.asarray(lsh_reorder_jax(
+        jnp.asarray(src), jnp.asarray(dst), n,
+        edge_mask=jnp.asarray(mask)))
+    filtered = np.asarray(lsh_reorder_jax(
+        jnp.asarray(src[mask]), jnp.asarray(dst[mask]), n))
+    np.testing.assert_array_equal(with_mask, filtered)
+
+
+def test_lsh_reorder_jax_degree_damping_matches_numpy_semantics():
+    """The jit path applies the same 1/sqrt(out_degree) hub damping as
+    lsh_reorder: a megahub source must not flip every destination's bits."""
+    n = 64
+    # hub node 0 points at everyone; plus a sparse ring
+    src = np.concatenate([np.zeros(n, np.int32),
+                          np.arange(n, dtype=np.int32)])
+    dst = np.concatenate([np.arange(n, dtype=np.int32),
+                          ((np.arange(n) + 1) % n).astype(np.int32)])
+    damped = np.asarray(lsh_reorder_jax(jnp.asarray(src), jnp.asarray(dst),
+                                        n, weight_by_degree=True))
+    raw = np.asarray(lsh_reorder_jax(jnp.asarray(src), jnp.asarray(dst),
+                                     n, weight_by_degree=False))
+    assert sorted(damped.tolist()) == list(range(n))
+    assert sorted(raw.tolist()) == list(range(n))
+    # manual check: damping divides each source row of r by sqrt(out_deg)
+    key = jax.random.PRNGKey(0)
+    r = np.asarray(jax.random.normal(key, (n, 16), dtype=jnp.float32))
+    deg = np.zeros(n)
+    np.add.at(deg, src, 1)
+    rd = r / np.sqrt(np.maximum(deg, 1.0))[:, None]
+    proj = np.zeros((n, 16), np.float32)
+    np.add.at(proj, dst, rd[src])
+    keys = ((proj > 0).astype(np.uint64)
+            * (1 << np.arange(16, dtype=np.uint64))[None, :]).sum(axis=1)
+    gray = keys ^ (keys >> np.uint64(1))
+    np.testing.assert_array_equal(damped, np.argsort(gray, kind="stable"))
+
+
+def test_bfs_vectorized_matches_queue_reference():
+    """Frontier-at-a-time BFS == the scalar per-node queue, permutation for
+    permutation — including masked edges, disconnected components, and an
+    explicit start node."""
+    from repro.core.reorder import _bfs_reorder_queue
+    rng = np.random.default_rng(9)
+    cases = [_random_graph(200, 1200, seed=1),
+             _random_graph(50, 30, seed=2),                # many components
+             Graph(src=rng.integers(0, 80, 300).astype(np.int32),
+                   dst=rng.integers(0, 80, 300).astype(np.int32),
+                   num_nodes=100, edge_mask=rng.random(300) < 0.5)]
+    for g in cases:
+        for start in (None, 0, g.num_nodes // 2):
+            got = bfs_reorder(g, start)
+            ref = _bfs_reorder_queue(g, start)
+            np.testing.assert_array_equal(got, ref)
+            assert sorted(got.tolist()) == list(range(g.num_nodes))
+
+
 # ------------------------------------------------------- shared-set plans
 @pytest.mark.parametrize("levels", [1, 2, 4])
 @pytest.mark.parametrize("op", ["sum", "mean", "max", "min"])

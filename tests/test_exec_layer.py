@@ -1,0 +1,353 @@
+"""repro.exec layer fusion (ISSUE 4): fused-layer parity vs unfused
+aggregate→linear, grads through both computation orders, order selection
+from the FLOP/byte model, and the joint-space autotune cache."""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graph import Graph, synthesize, DatasetSpec
+from repro.core import minhash_reorder
+from repro.exec import (build_plan, build_layer_plan, choose_order,
+                        layer_order_costs, autotune_layer,
+                        autotune_layer_plan, graph_fingerprint,
+                        default_layer_candidates)
+from repro.models.gcn import gcn_init, gcn_apply, gcn_loss, make_graph_inputs
+from repro.models.sage_gin import sage_init, sage_apply
+
+KEY = jax.random.PRNGKey(0)
+LAYER_CANDS = [("aggregate_first", False, "coo", 128, True),
+               ("update_first", False, "coo", 128, True)]
+
+
+def _random_graph(n, e, seed=0):
+    rng = np.random.default_rng(seed)
+    return Graph(src=rng.integers(0, n, e).astype(np.int32),
+                 dst=rng.integers(0, n, e).astype(np.int32), num_nodes=n)
+
+
+def _skewed_graph(n=1024, seed=1):
+    """Hub row inflates the padded ELL width — the compaction stress case."""
+    rng = np.random.default_rng(seed)
+    hub_src = rng.permutation(n).astype(np.int32)
+    tail = np.arange(n - 1, dtype=np.int32)
+    return Graph(src=np.concatenate([hub_src, tail]),
+                 dst=np.concatenate([np.zeros(n, np.int32), tail + 1]),
+                 num_nodes=n)
+
+
+def _empty_row_graph(n=256):
+    """Later row blocks have zero active slots: the fused layer kernel's
+    fallback rows must still go through the W update (+bias/ReLU)."""
+    rng = np.random.default_rng(2)
+    return Graph(src=rng.integers(0, n, 400).astype(np.int32),
+                 dst=rng.integers(0, 32, 400).astype(np.int32), num_nodes=n)
+
+
+GRAPHS = {
+    "random": _random_graph(300, 2000),
+    "skewed": _skewed_graph(),
+    "empty_rows": _empty_row_graph(),
+}
+
+
+def _ref_layer(gplan, x, w, b, relu):
+    """The unfused PR 3 chain: aggregate → linear (+bias) → ReLU."""
+    y = gplan.apply(x) @ w
+    if b is not None:
+        y = y + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def _inputs(g, d_in, d_out, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((g.num_nodes, d_in))
+                    .astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((d_in, d_out)) / np.sqrt(d_in))
+                    .astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(d_out).astype(np.float32))
+    return x, w, b
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("backend", ["pallas", "jnp", "coo"])
+@pytest.mark.parametrize("order", ["aggregate_first", "update_first"])
+def test_layer_parity_orders_and_backends(gname, backend, order):
+    """Every (backend, order) — plus the one-launch fused kernels on pallas
+    (padded AND slot-compacted grids) — matches unfused aggregate→linear."""
+    g = GRAPHS[gname]
+    x, w, b = _inputs(g, 24, 8)
+    ref = np.asarray(_ref_layer(build_plan(g, "gcn", bm=64, backend="coo"),
+                                x, w, b, relu=True))
+    for compact in (True, False):
+        gplan = build_plan(g, "gcn", bm=64, backend=backend, compact=compact)
+        fuses = [False]
+        if backend == "pallas" and order == "aggregate_first":
+            fuses.append(True)        # the spmm_blockell_update* kernels
+        for fuse in fuses:
+            lp = build_layer_plan(g, "gcn", d_in=24, d_out=8, order=order,
+                                  fuse=fuse, gplan=gplan)
+            got = np.asarray(lp.apply(x, w, b, relu=True))
+            np.testing.assert_allclose(
+                got, ref, atol=1e-5, rtol=1e-5,
+                err_msg=f"{backend} {order} fuse={fuse} compact={compact}")
+
+
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_layer_parity_sum_mean_modes(mode):
+    g = GRAPHS["empty_rows"]
+    x, w, b = _inputs(g, 17, 9, seed=3)
+    ref = np.asarray(_ref_layer(build_plan(g, mode, bm=64, backend="coo"),
+                                x, w, None, relu=False))
+    for backend in ("pallas", "jnp", "coo"):
+        for order in ("aggregate_first", "update_first"):
+            lp = build_layer_plan(g, mode, d_in=17, d_out=9, order=order,
+                                  bm=64, backend=backend)
+            np.testing.assert_allclose(np.asarray(lp.apply(x, w)), ref,
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"{backend} {order}")
+
+
+def test_fused_kernel_no_bias_no_relu_epilogue():
+    """The epilogue's optional stages really are optional (pallas fused)."""
+    g = GRAPHS["random"]
+    x, w, b = _inputs(g, 16, 8, seed=5)
+    gplan = build_plan(g, "gcn", bm=64, backend="pallas", compact=True)
+    ref_plain = np.asarray(_ref_layer(gplan, x, w, None, relu=False))
+    ref_full = np.asarray(_ref_layer(gplan, x, w, b, relu=True))
+    lp = build_layer_plan(g, "gcn", d_in=16, d_out=8,
+                          order="aggregate_first", fuse=True, gplan=gplan)
+    np.testing.assert_allclose(np.asarray(lp.apply(x, w)), ref_plain,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(lp.apply(x, w, b, relu=True)),
+                               ref_full, atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------------- grads
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("order", ["aggregate_first", "update_first"])
+def test_layer_grads_vs_unfused(gname, order):
+    """dL/dx, dL/dW, dL/db through the layer VJP == autodiff of the unfused
+    chain, ≤1e-5 on skewed/random/empty-row graphs."""
+    g = GRAPHS[gname]
+    x, w, b = _inputs(g, 12, 6, seed=7)
+    gplan = build_plan(g, "gcn", bm=64, backend="jnp", compact=True)
+    lp = build_layer_plan(g, "gcn", d_in=12, d_out=6, order=order,
+                          gplan=gplan)
+
+    def ref_loss(x, w, b):
+        return jnp.sum(jnp.tanh(_ref_layer(gplan, x, w, b, relu=True)))
+
+    def lp_loss(x, w, b):
+        return jnp.sum(jnp.tanh(lp.apply(x, w, b, relu=True)))
+
+    g_ref = jax.grad(ref_loss, argnums=(0, 1, 2))(x, w, b)
+    g_lp = jax.grad(lp_loss, argnums=(0, 1, 2))(x, w, b)
+    for a, c, name in zip(g_ref, g_lp, ("dx", "dw", "db")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=1e-5, rtol=1e-4,
+                                   err_msg=f"{name} {order}")
+
+
+def test_fused_pallas_grads():
+    """The one-launch kernel's VJP (transpose plan + node reduction)."""
+    g = GRAPHS["empty_rows"]
+    x, w, b = _inputs(g, 16, 8, seed=9)
+    gplan = build_plan(g, "gcn", bm=64, backend="pallas", compact=True)
+    lp = build_layer_plan(g, "gcn", d_in=16, d_out=8,
+                          order="aggregate_first", fuse=True, gplan=gplan)
+    ref_gplan = build_plan(g, "gcn", bm=64, backend="coo")
+
+    def ref_loss(x, w, b):
+        return jnp.sum(jnp.tanh(_ref_layer(ref_gplan, x, w, b, relu=True)))
+
+    def lp_loss(x, w, b):
+        return jnp.sum(jnp.tanh(lp.apply(x, w, b, relu=True)))
+
+    g_ref = jax.grad(ref_loss, argnums=(0, 1, 2))(x, w, b)
+    g_lp = jax.grad(lp_loss, argnums=(0, 1, 2))(x, w, b)
+    for a, c, name in zip(g_ref, g_lp, ("dx", "dw", "db")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=1e-5, rtol=1e-4, err_msg=name)
+
+
+# ------------------------------------------------------------ model wiring
+def test_gcn_fused_executor_matches_segment():
+    g = synthesize(DatasetSpec("t", 400, 2500, 16, 4, community=0.9,
+                               num_communities=6, seed=4))
+    g = g.permute(minhash_reorder(g))
+    graph = make_graph_inputs(g)
+    x = jnp.asarray(g.node_feat)
+    params = gcn_init(KEY, [16, 8, 4])
+    gplan = build_plan(g, "gcn", bm=64, backend="jnp")
+    plans = [build_layer_plan(g, "gcn", d_in=16, d_out=8, gplan=gplan),
+             build_layer_plan(g, "gcn", d_in=8, d_out=4, gplan=gplan)]
+    ref = gcn_apply(params, x, graph, executor="segment")
+    got = gcn_apply(params, x, graph, executor="fused", ell=plans)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # grads through the whole fused model == segment
+    labels = jnp.asarray(g.labels)
+    mask = jnp.asarray(g.train_mask)
+    g_seg = jax.grad(gcn_loss)(params, x, graph, labels, mask,
+                               executor="segment")
+    g_fus = jax.grad(gcn_loss)(params, x, graph, labels, mask,
+                               executor="fused", ell=plans)
+    jax.tree_util.tree_map(
+        lambda a, c: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(c), atol=1e-5, rtol=1e-4),
+        g_seg, g_fus)
+
+
+def test_gcn_fused_executor_validates_plans():
+    g = GRAPHS["random"]
+    params = gcn_init(KEY, [16, 8, 4])
+    x = jnp.zeros((g.num_nodes, 16), jnp.float32)
+    with pytest.raises(ValueError, match="one repro.exec.LayerExecutionPlan"):
+        gcn_apply(params, x, {}, executor="fused", ell=None)
+    wrong_mode = [build_layer_plan(g, "sum", d_in=16, d_out=8, backend="coo"),
+                  build_layer_plan(g, "sum", d_in=8, d_out=4, backend="coo")]
+    with pytest.raises(ValueError, match="mode"):
+        gcn_apply(params, x, {}, executor="fused", ell=wrong_mode)
+
+
+def test_sage_fused_executor_matches_segment():
+    g = synthesize(DatasetSpec("s", 300, 1800, 12, 3, community=0.9,
+                               num_communities=5, seed=6))
+    graph = {"src": jnp.asarray(g.src), "dst": jnp.asarray(g.dst)}
+    x = jnp.asarray(g.node_feat)
+    params = sage_init(KEY, [12, 8, 5])
+    gplan = build_plan(g, "mean", bm=64, backend="jnp")
+    plans = [build_layer_plan(g, "mean", d_in=12, d_out=8, gplan=gplan),
+             build_layer_plan(g, "mean", d_in=8, d_out=5, gplan=gplan)]
+    ref = sage_apply(params, x, graph, executor="segment")
+    got = sage_apply(params, x, graph, executor="fused", plan=plans)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------- order selection
+def test_choose_order_shrinking_picks_update_first():
+    """d_out < d_in: run the SpMM on the narrow side (fewer bytes)."""
+    assert choose_order(2708, 10556, 1433, 16) == "update_first"
+    assert choose_order(300, 2000, 128, 8) == "update_first"
+
+
+def test_choose_order_growing_picks_aggregate_first():
+    assert choose_order(2708, 10556, 16, 1433) == "aggregate_first"
+    assert choose_order(300, 2000, 8, 128) == "aggregate_first"
+    # ties go to the fusable order
+    assert choose_order(300, 2000, 64, 64) == "aggregate_first"
+
+
+def test_order_costs_symmetry():
+    """Swapping d_in/d_out swaps the verdict: the matmul term is shared and
+    only the SpMM width differs."""
+    a = layer_order_costs(500, 4000, 96, 12)
+    b = layer_order_costs(500, 4000, 12, 96)
+    assert a["update_first"] < a["aggregate_first"]
+    assert b["aggregate_first"] < b["update_first"]
+    assert np.isclose(a["update_first"], b["aggregate_first"])
+
+
+def test_build_layer_plan_auto_order_and_fuse_rules():
+    g = GRAPHS["random"]
+    lp = build_layer_plan(g, "gcn", d_in=64, d_out=8, backend="coo")
+    assert lp.order == "update_first" == lp.model_order
+    assert not lp.fuse                       # fusion is pallas-only
+    lp2 = build_layer_plan(g, "gcn", d_in=8, d_out=64, backend="pallas")
+    assert lp2.order == "aggregate_first" and lp2.fuse
+    with pytest.raises(ValueError, match="fuse=True requires"):
+        build_layer_plan(g, "gcn", d_in=8, d_out=64, order="update_first",
+                         fuse=True, backend="pallas")
+    with pytest.raises(ValueError, match="unknown order"):
+        build_layer_plan(g, "gcn", d_in=8, d_out=8, order="sideways")
+    # a prebuilt gplan must match the requested aggregation mode
+    with pytest.raises(ValueError, match="mode"):
+        build_layer_plan(g, "mean", d_in=8, d_out=8,
+                         gplan=build_plan(g, "gcn", backend="coo"))
+
+
+# ------------------------------------------------------- joint-space cache
+def test_autotune_layer_cache_round_trip(tmp_path):
+    g = _random_graph(220, 1300)
+    rec1 = autotune_layer(g, 32, 8, "gcn", candidates=LAYER_CANDS,
+                          cache_dir=str(tmp_path), iters=1)
+    assert not rec1.from_cache
+    assert (rec1.order, rec1.fuse, rec1.backend, rec1.bm,
+            rec1.compact) in LAYER_CANDS
+    assert rec1.model_order == choose_order(220, 1300, 32, 8)
+    assert len(rec1.table) == len(LAYER_CANDS)
+
+    rec2 = autotune_layer(g, 32, 8, "gcn", candidates=LAYER_CANDS,
+                          cache_dir=str(tmp_path), iters=1)
+    assert rec2.from_cache
+    assert rec2.as_config() == rec1.as_config()
+    assert rec2.us == rec1.us and rec2.model_order == rec1.model_order
+
+    # layer keys live in the same fingerprinted JSON document as graph keys
+    entries = json.load(open(os.path.join(str(tmp_path), "autotune.json")))
+    assert any(k.startswith(graph_fingerprint(g)) and ":layer:" in k
+               for k in entries)
+
+    # the layer shape is part of the key
+    rec3 = autotune_layer(g, 8, 32, "gcn", candidates=LAYER_CANDS,
+                          cache_dir=str(tmp_path), iters=1)
+    assert not rec3.from_cache and rec3.key != rec1.key
+
+    rec4 = autotune_layer(g, 32, 8, "gcn", candidates=LAYER_CANDS,
+                          cache_dir=str(tmp_path), iters=1, force=True)
+    assert not rec4.from_cache
+
+
+def test_autotune_layer_plan_builds_winner(tmp_path):
+    g = _random_graph(220, 1300)
+    lp, rec = autotune_layer_plan(g, 24, 6, "gcn", candidates=LAYER_CANDS,
+                                  cache_dir=str(tmp_path), iters=1)
+    assert (lp.order, lp.fuse, lp.backend) == (rec.order, rec.fuse,
+                                               rec.backend)
+    x, w, b = _inputs(g, 24, 6)
+    assert np.asarray(lp.apply(x, w, b, relu=True)).shape == (220, 6)
+    # a matching prebuilt gplan is reused, a mismatched one rebuilt
+    lp2, _ = autotune_layer_plan(g, 24, 6, "gcn", candidates=LAYER_CANDS,
+                                 cache_dir=str(tmp_path), iters=1,
+                                 gplan=lp.gplan)
+    assert lp2.gplan is lp.gplan
+
+
+def test_default_layer_candidates_platforms():
+    cpu = default_layer_candidates("cpu")
+    tpu = default_layer_candidates("tpu")
+    assert {o for o, *_ in cpu} == {"aggregate_first", "update_first"}
+    assert not any(f for _, f, *_ in cpu)          # fusion is pallas-only
+    assert any(f for _, f, *_ in tpu)
+    # fuse=True never escapes its validity domain
+    assert all(o == "aggregate_first" and b == "pallas"
+               for o, f, b, _, _ in tpu if f)
+    # the jnp dense-tile engine is width-gated on its wide side
+    wide_in = default_layer_candidates("cpu", d_in=1433, d_out=16)
+    assert not any(b == "jnp" and o == "aggregate_first"
+                   for o, _, b, _, _ in wide_in)
+    assert any(b == "jnp" and o == "update_first"
+               for o, _, b, _, _ in wide_in)
+    wide_out = default_layer_candidates("cpu", d_in=16, d_out=1433)
+    assert any(b == "jnp" and o == "aggregate_first"
+               for o, _, b, _, _ in wide_out)
+    assert not any(b == "jnp" and o == "update_first"
+                   for o, _, b, _, _ in wide_out)
+
+
+def test_gcn_fused_rejects_non_relu_activation():
+    g = GRAPHS["random"]
+    params = gcn_init(KEY, [16, 8, 4])
+    x = jnp.zeros((g.num_nodes, 16), jnp.float32)
+    gplan = build_plan(g, "gcn", bm=64, backend="coo")
+    plans = [build_layer_plan(g, "gcn", d_in=16, d_out=8, gplan=gplan),
+             build_layer_plan(g, "gcn", d_in=8, d_out=4, gplan=gplan)]
+    with pytest.raises(ValueError, match="only fuse ReLU"):
+        gcn_apply(params, x, {}, executor="fused", ell=plans,
+                  act=jax.nn.elu)
