@@ -18,6 +18,15 @@ on both a shrinking (d_feat -> hidden) and a growing (hidden -> wide) layer
 shape, recording whether the measured computation order agrees with the
 FLOP/byte model.
 
+And WHOLE FORWARDS (ISSUE 5): the DP-scheduled
+``ForwardExecutionPlan`` (``autotune_forward`` — per-layer configs chosen
+jointly, then the DP/greedy/cold-model schedules raced as measured
+whole-chain fwd+bwd) against the PR 4 baseline of per-layer-tuned layer
+plans chained together.  Because the per-layer-greedy schedule is always in
+the race, the scheduled forward can only match or beat it — both are
+re-timed interleaved here.  The generalized two-W / self-coeff epilogue is
+parity-checked as one-launch SAGE and GIN layers.
+
 CPU wall-clock is meaningful for the jnp/coo paths; the Pallas kernels run
 interpret-mode here so only their *parity* is reported (the TPU win shows up
 as grid-size and HBM-traffic reductions, also emitted).  ``--quick`` trims
@@ -34,7 +43,9 @@ import jax.numpy as jnp
 
 from repro.core import minhash_reorder
 from repro.exec import (autotune_plan, autotune_layer_plan, build_plan,
-                        build_layer_plan, choose_order)
+                        build_layer_plan, choose_order, autotune_forward,
+                        build_forward_plan, gcn_chain, sage_chain, gin_chain,
+                        chain_params)
 from repro.graph import cora_like
 from .common import dataset, emit, time_fn
 
@@ -246,6 +257,131 @@ def _bench_layer(name: str, g, shapes, quick: bool, cache_dir: str) -> None:
                  max_err=err, grid=pk.gplan.grid_size)
 
 
+def _forward_cands(specs, quick: bool):
+    """Width-aware CPU candidate sets per layer (same gating as the layer
+    bench: the jnp dense-tile engine can never win at a wide feature side)."""
+    if jax.default_backend() == "tpu":
+        return None
+    out = []
+    for s in specs:
+        cs = [("aggregate_first", False, "coo", 128, True),
+              ("update_first", False, "coo", 128, True)]
+        if not quick:
+            if s.d_out <= 256:
+                cs.append(("update_first", False, "jnp", 64, True))
+            if s.d_in <= 256:
+                cs.append(("aggregate_first", False, "jnp", 64, True))
+        out.append(cs)
+    return out
+
+
+def _chain_step(fplan, params):
+    """Jitted fwd+bwd through a whole forward chain (grads wrt x + params)."""
+    @jax.jit
+    def step(x):
+        y, vjp = jax.vjp(lambda x, p: fplan.apply_chain(x, p), x, params)
+        return vjp(y)
+    return step
+
+
+def _bench_forward(name: str, g, dims, quick: bool, cache_dir: str) -> None:
+    """DP-scheduled whole forward (ISSUE 5) vs the PR 4 per-layer-tuned
+    baseline, fwd+bwd over the full chain, re-timed interleaved."""
+    g = g.permute(minhash_reorder(g))
+    iters = 3 if quick else 15
+    specs = gcn_chain(dims)
+    chain = "x".join(str(d) for d in dims)
+    cands = _forward_cands(specs, quick)
+    fplan, rec = autotune_forward(g, specs, candidates=cands,
+                                  cache_dir=cache_dir,
+                                  iters=max(iters // 2, 3))
+    greedy_cfgs = rec.schedule_configs("greedy")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((g.num_nodes, dims[0]))
+                    .astype(np.float32))
+    params = chain_params(specs, seed=0)
+    dp_step = _chain_step(fplan, params)
+    if tuple(fplan.configs) == tuple(greedy_cfgs):
+        # the DP kept the per-layer schedule: same compiled callable, so the
+        # comparison is exactly 1.0x by construction
+        us_dp = us_greedy = _time_interleaved([dp_step], (x,), iters)[0]
+    else:
+        gplan_fwd = build_forward_plan(g, specs, greedy_cfgs,
+                                       source="greedy")
+        greedy_step = _chain_step(gplan_fwd, params)
+        us_greedy, us_dp = _time_interleaved([greedy_step, dp_step], (x,),
+                                             iters)
+    emit(f"exec/forward_pr4_fwd_bwd_{name}_{chain}", us_greedy,
+         "per-layer-tuned layer plans chained (PR 4 baseline)",
+         graph=name, dims=list(dims),
+         configs=[list(c) for c in greedy_cfgs])
+    emit(f"exec/forward_dp_fwd_bwd_{name}_{chain}", us_dp,
+         f"schedule={rec.source} "
+         f"speedup_vs_pr4={us_greedy / max(us_dp, 1e-9):.2f}x "
+         f"gplans={fplan.num_gplans}",
+         graph=name, dims=list(dims), source=rec.source,
+         configs=[list(c) for c in fplan.configs],
+         num_gplans=fplan.num_gplans,
+         speedup_vs_pr4=us_greedy / max(us_dp, 1e-9),
+         same_schedule=tuple(fplan.configs) == tuple(greedy_cfgs),
+         autotune_table=[list(r) for r in rec.table])
+
+    # parity: the scheduled chain must reproduce the unfused reference chain
+    ref_plan = build_plan(g, "gcn", backend="coo")
+    h = x
+    L = len(specs)
+    for i, p in enumerate(params):
+        h = ref_plan.apply(h) @ p["w"] + p["b"]
+        if i + 1 < L:
+            h = jnp.maximum(h, 0.0)
+    err = float(jnp.abs(fplan.apply_chain(x, params) - h).max())
+    emit(f"exec/forward_parity_{name}_{chain}", 0.0, f"max_err={err:.2e}",
+         max_err=err)
+
+
+def _bench_two_w_layers(name: str, g) -> None:
+    """SAGE / GIN as ONE launch per layer: the generalized two-W /
+    self-coeff Pallas layer kernels (interpret-mode parity on CPU)."""
+    from repro.models.sage_gin import (sage_init, sage_apply, gin_init,
+                                       gin_apply)
+    g = g.permute(minhash_reorder(g))
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((g.num_nodes, 12))
+                    .astype(np.float32))
+    graph = {"src": jnp.asarray(g.src), "dst": jnp.asarray(g.dst)}
+
+    sage_params = sage_init(key, [12, 8, 5])
+    gplan = build_plan(g, "mean", bm=128, backend="pallas", compact=True)
+    splans = [build_layer_plan(g, "mean", d_in=12, d_out=8,
+                               order="aggregate_first", fuse=True,
+                               gplan=gplan),
+              build_layer_plan(g, "mean", d_in=8, d_out=5,
+                               order="aggregate_first", fuse=True,
+                               gplan=gplan)]
+    ref = sage_apply(sage_params, x, graph, executor="segment")
+    got = sage_apply(sage_params, x, graph, executor="fused", plan=splans)
+    err = float(jnp.abs(got - ref).max())
+    emit(f"exec/forward_sage_one_launch_{name}", 0.0,
+         f"max_err={err:.2e} launches_per_layer=1 (two-W epilogue)",
+         max_err=err, launches_per_layer=1)
+
+    gin_params = gin_init(key, 12, 8, 2, 4)
+    gplan_s = build_plan(g, "sum", bm=128, backend="pallas", compact=True)
+    gplans = [build_layer_plan(g, "sum", d_in=12, d_out=8,
+                               order="aggregate_first", fuse=True,
+                               gplan=gplan_s),
+              build_layer_plan(g, "sum", d_in=8, d_out=8,
+                               order="aggregate_first", fuse=True,
+                               gplan=gplan_s)]
+    ref = gin_apply(gin_params, x, graph, executor="segment")
+    got = gin_apply(gin_params, x, graph, executor="fused", plan=gplans)
+    err = float(jnp.abs(got - ref).max())
+    emit(f"exec/forward_gin_one_launch_{name}", 0.0,
+         f"max_err={err:.2e} launches_per_layer=1 (self-coeff epilogue)",
+         max_err=err, launches_per_layer=1)
+
+
 def main(quick: bool = False) -> None:
     cache_dir = tempfile.mkdtemp(prefix="exec_autotune_")
     cora = cora_like()
@@ -255,12 +391,24 @@ def main(quick: bool = False) -> None:
     _bench_layer("cora", cora,
                  [(cora.node_feat.shape[1], 16), (16, 128)],
                  quick, cache_dir)
+    # whole-forward scheduling (ISSUE 5): the real 2-layer GCN chain, plus a
+    # deeper mixed shrink/grow chain that gives the DP boundaries to couple
+    _bench_forward("cora", cora, [cora.node_feat.shape[1], 16, 16],
+                   quick, cache_dir)
     if not quick:
+        _bench_forward("cora", cora, [cora.node_feat.shape[1], 64, 128, 16],
+                       quick, cache_dir)
+        _bench_two_w_layers("cora", cora)
         cs = dataset("CITESEER-S")
         _bench_graph("citeseer_s", cs, 128, quick, cache_dir)
         _bench_layer("citeseer_s", cs,
                      [(cs.node_feat.shape[1], 16), (16, 128)],
                      quick, cache_dir)
+        _bench_forward("citeseer_s", cs, [cs.node_feat.shape[1], 16, 16],
+                       quick, cache_dir)
+        _bench_forward("citeseer_s", cs,
+                       [cs.node_feat.shape[1], 64, 128, 16],
+                       quick, cache_dir)
 
 
 if __name__ == "__main__":

@@ -274,16 +274,17 @@ class GNNBundle:
         """``executor="blockell"`` + a ``repro.exec.GraphExecutionPlan``
         routes GCN aggregation through the fused block-ELL engine;
         ``executor="fused"`` + a per-layer list of
-        ``repro.exec.LayerExecutionPlan`` folds the update matmul in too
-        (the plans are closed over; their custom VJPs keep the loss
-        differentiable)."""
+        ``repro.exec.LayerExecutionPlan`` — or a whole-forward
+        ``repro.exec.ForwardExecutionPlan`` (DP-scheduled layer chain) —
+        folds the update matmul in too (the plans are closed over; their
+        custom VJPs keep the loss differentiable)."""
         if executor == "blockell" and exec_plan is None:
             raise ValueError("executor='blockell' needs an exec_plan "
                              "(repro.exec.build_plan / autotune_plan)")
         if executor == "fused" and not exec_plan:
             raise ValueError("executor='fused' needs per-layer plans "
                              "(repro.exec.build_layer_plan / "
-                             "autotune_layer_plan)")
+                             "autotune_layer_plan / plan_forward)")
         g = self.geometry(shape)
 
         def loss(params, batch):

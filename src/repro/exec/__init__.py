@@ -43,4 +43,11 @@ from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
 from .autotune import (autotune, autotune_plan, autotune_layer,
                        autotune_layer_plan, graph_fingerprint,
                        AutotuneRecord, LayerAutotuneRecord,
-                       default_candidates, default_layer_candidates)
+                       default_candidates, default_layer_candidates,
+                       cached_layer_costs, prune_cache, CACHE_MAX_ENTRIES)
+from .forward import (LayerSpec, ForwardExecutionPlan, ForwardAutotuneRecord,
+                      ForwardCostOracle, build_cost_oracle, dp_schedule,
+                      exhaustive_schedule, plan_forward, build_forward_plan,
+                      autotune_forward, gcn_chain, sage_chain, gin_chain,
+                      chain_params, model_layer_cost, residual_edge_cost,
+                      plan_switch_cost)

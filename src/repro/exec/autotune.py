@@ -83,6 +83,9 @@ class AutotuneRecord:
 
 
 # ------------------------------------------------------------------- cache
+CACHE_MAX_ENTRIES = 1024      # prune_cache keeps the most recently written
+
+
 def _cache_path(cache_dir: Optional[str]) -> str:
     root = cache_dir or os.environ.get(
         "REPRO_EXEC_CACHE",
@@ -104,6 +107,72 @@ def _cache_store(path: str, entries: dict) -> None:
     with open(tmp, "w") as f:
         json.dump(entries, f, indent=1, sort_keys=True)
     os.replace(tmp, path)
+
+
+def _cache_put(path: str, key: str, value: dict,
+               max_entries: Optional[int] = None) -> None:
+    """Insert one entry (re-reading first so concurrent tuners of OTHER keys
+    aren't clobbered — per-key last-write wins), stamp its write time, and
+    prune the document to ``max_entries`` most-recently-written keys so the
+    file can't grow without bound across graph fingerprints."""
+    entries = _cache_load(path)
+    value = dict(value)
+    value["_ts"] = time.time()
+    entries[key] = value
+    _prune(entries, max_entries if max_entries is not None
+           else CACHE_MAX_ENTRIES)
+    _cache_store(path, entries)
+
+
+def _prune(entries: dict, max_entries: int) -> None:
+    if len(entries) <= max_entries:
+        return
+    # unstamped entries predate the stamp and are evicted first
+    victims = sorted(entries, key=lambda k: entries[k].get("_ts", 0.0),
+                     reverse=True)[max_entries:]
+    for k in victims:
+        del entries[k]
+
+
+def prune_cache(max_entries: int = CACHE_MAX_ENTRIES,
+                cache_dir: Optional[str] = None) -> int:
+    """Trim the autotune disk cache to its ``max_entries`` most-recently-
+    written keys; returns the number of entries remaining.  Every store
+    already prunes, so this is only needed to shrink an existing file."""
+    path = _cache_path(cache_dir)
+    entries = _cache_load(path)
+    _prune(entries, max_entries)
+    try:
+        _cache_store(path, entries)
+    except OSError:
+        pass
+    return len(entries)
+
+
+def cached_layer_costs(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
+                       relu: bool = True, bias: bool = True,
+                       platform: Optional[str] = None,
+                       cache_dir: Optional[str] = None
+                       ) -> Dict[LayerCandidate, float]:
+    """Measured fwd+bwd microseconds per layer candidate, merged from every
+    cached :func:`autotune_layer` run of this (graph, shape, mode, epilogue)
+    on this platform — regardless of which candidate SET each run raced.
+    The whole-forward DP (:mod:`repro.exec.forward`) uses this as its warm
+    per-edge cost oracle; an empty dict means the layer is cold."""
+    platform = platform or jax.default_backend()
+    prefix = (f"{graph_fingerprint(g)}:layer:{d_in}x{d_out}:{mode}:"
+              f"r{int(relu)}b{int(bias)}:{platform}:")
+    out: Dict[LayerCandidate, float] = {}
+    for key, e in _cache_load(_cache_path(cache_dir)).items():
+        if not key.startswith(prefix):
+            continue
+        for row in e.get("table", ()):
+            order, fuse, backend, bm, compact, us = row
+            cand = (str(order), bool(fuse), str(backend), int(bm),
+                    bool(compact))
+            if cand not in out or us < out[cand]:
+                out[cand] = float(us)
+    return out
 
 
 # --------------------------------------------------------------- measuring
@@ -166,12 +235,8 @@ def autotune(g: Graph, d: int, mode: str = "gcn", *,
                            f"(tried {cands})")
     us, (backend, bm, compact) = best
     try:
-        # re-read before writing so concurrent tuners of OTHER graphs
-        # don't have their fresh entries clobbered (per-key last-write wins)
-        entries = _cache_load(path)
-        entries[key] = {"backend": backend, "bm": bm, "compact": compact,
-                        "us": us, "table": table}
-        _cache_store(path, entries)
+        _cache_put(path, key, {"backend": backend, "bm": bm,
+                               "compact": compact, "us": us, "table": table})
     except OSError:
         pass                  # read-only FS: tuning still works, just uncached
     return AutotuneRecord(key=key, backend=backend, bm=bm, compact=compact,
@@ -338,11 +403,10 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
             if alt[-1] <= us * 1.10:
                 order, fuse, backend, bm, compact, us = alt
     try:
-        entries = _cache_load(path)
-        entries[key] = {"order": order, "fuse": fuse, "backend": backend,
-                        "bm": bm, "compact": compact, "us": us,
-                        "model_order": model_order, "table": table}
-        _cache_store(path, entries)
+        _cache_put(path, key, {"order": order, "fuse": fuse,
+                               "backend": backend, "bm": bm,
+                               "compact": compact, "us": us,
+                               "model_order": model_order, "table": table})
     except OSError:
         pass                  # read-only FS: tuning still works, just uncached
     return LayerAutotuneRecord(key=key, order=order, fuse=fuse,

@@ -417,10 +417,20 @@ def _pad128(d: int) -> int:
     return -(-d // 128) * 128
 
 
+def _self_term(x: jax.Array, w_self: jax.Array, self_coeff) -> jax.Array:
+    """The epilogue's self half ``self_coeff * (x @ w_self)`` (coeff may be a
+    traced scalar of shape () or (1,), or None for 1)."""
+    s = x @ w_self
+    if self_coeff is not None:
+        s = s * jnp.reshape(self_coeff, ())
+    return s
+
+
 def _pallas_layer(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array,
-                  w: jax.Array, b: Optional[jax.Array], relu: bool
+                  w: jax.Array, b: Optional[jax.Array], relu: bool,
+                  w_self: Optional[jax.Array] = None, self_coeff=None
                   ) -> jax.Array:
-    """One fused layer launch: SpMM + W-update epilogue (+bias/ReLU)."""
+    """One fused layer launch: SpMM + (two-)W-update epilogue (+bias/ReLU)."""
     n, d_in = x.shape
     d_out = w.shape[1]
     bm, bk, R, C = meta.bm, meta.bk, meta.R, meta.C
@@ -429,17 +439,23 @@ def _pallas_layer(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array,
     wp = jnp.pad(w, ((0, dp_in - d_in), (0, dp_out - d_out)))
     bp = (None if b is None
           else jnp.pad(b, (0, dp_out - d_out)).reshape(1, dp_out))
+    wsp = (None if w_self is None
+           else jnp.pad(w_self, ((0, dp_in - d_in), (0, dp_out - d_out))))
+    cf = (None if self_coeff is None
+          else jnp.reshape(jnp.asarray(self_coeff, jnp.float32), (1, 1)))
     if meta.compact:
         y = None
         if meta.n_active:
             y = spmm_blockell_update_compact(
                 a["rows"], a["cols"], a["blocks"], xp, a["s_in2d"],
-                a["s_out2d"], wp, bp, bm=bm, bk=bk, n_row_blocks=R,
+                a["s_out2d"], wp, bp, wsp, cf, bm=bm, bk=bk, n_row_blocks=R,
                 add_diag=meta.add_diag, relu=relu, interpret=meta.interpret)
         # rows whose destination block has no active slot: the analytic
-        # diagonal term goes through the same update epilogue outside
+        # diagonal and self terms go through the same update epilogue outside
         fb = (x * (a["s_in"] * a["s_out"])[:, None] @ w if meta.add_diag
               else jnp.zeros((n, d_out), x.dtype))
+        if w_self is not None:
+            fb = fb + _self_term(x, w_self, self_coeff)
         if b is not None:
             fb = fb + b
         if relu:
@@ -449,7 +465,7 @@ def _pallas_layer(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array,
         return jnp.where(a["node_active"][:, None], y[:n, :d_out], fb)
     y = spmm_blockell_update(
         a["block_cols"], a["blocks"], xp, a["s_in2d"], a["s_out2d"], wp, bp,
-        bm=bm, bk=bk, add_diag=meta.add_diag, relu=relu,
+        wsp, cf, bm=bm, bk=bk, add_diag=meta.add_diag, relu=relu,
         interpret=meta.interpret)
     return y[:n, :d_out]
 
@@ -466,6 +482,15 @@ class LayerExecutionPlan:
     aggregate-first order, runs SpMM + update + bias + ReLU as ONE launch
     (``fuse=True``; kernels/spmm_blockell.py ``spmm_blockell_update*``).
 
+    The generalized TWO-W epilogue (ISSUE 5) adds an optional self half:
+
+        y = act( F(x) @ w  +  self_coeff * (x @ w_self)  +  b )
+
+    with ``self_coeff`` an optional TRACED scalar (default 1).  GraphSAGE's
+    concat form ``concat(h, F(h)) @ W == h @ W[:d] + F(h) @ W[d:]`` and GIN's
+    ``((1+ε) h + F(h)) @ W`` (pass ``w_self=w`` and ``self_coeff=1+ε``) each
+    become one plan call — one kernel launch per layer when fused.
+
     The custom VJP runs ONE aggregation through the precompiled transpose
     plan and mirrors the forward's computation order (``y = M x W + b``
     either way, so both forms are exact):
@@ -476,7 +501,9 @@ class LayerExecutionPlan:
       the residual, then ``u = ḡ Wᵀ``, ``dx = Mᵀ u`` (width ``d_in``) and
       ``dW = aggᵀ ḡ`` — the transpose SpMM always streams the NARROW side,
       exactly like the forward.  ``db = Σ ḡ``; the backward never re-runs
-      the forward.
+      the forward.  The self half never touches the aggregation:
+      ``dx += c ḡ W_selfᵀ``, ``dW_self = c xᵀ ḡ`` and
+      ``dc = ⟨W_self, xᵀ ḡ⟩`` share one ``xᵀ ḡ`` product.
     """
 
     gplan: GraphExecutionPlan
@@ -499,8 +526,9 @@ class LayerExecutionPlan:
     def num_nodes(self) -> int:
         return self.gplan.num_nodes
 
-    def _layer_fn(self, has_bias: bool, relu: bool) -> Callable:
-        key = (has_bias, relu)
+    def _layer_fn(self, has_bias: bool, relu: bool, has_self: bool = False,
+                  has_coeff: bool = False) -> Callable:
+        key = (has_bias, relu, has_self, has_coeff)
         if key in self._fns:
             return self._fns[key]
         gp, order, fuse = self.gplan, self.order, self.fuse
@@ -518,79 +546,101 @@ class LayerExecutionPlan:
                 y = y + b
             return jnp.maximum(y, 0.0) if relu else y
 
-        def forward(x, w, b):
+        def forward(x, w, b, ws, c):
             if fuse:
-                return _pallas_layer(meta_f, af, x, w, b, relu)
-            if order == "aggregate_first":
-                return post(_run_side(meta_f, af, x) @ w, b)
-            return post(_run_side(meta_f, af, x @ w), b)
+                return _pallas_layer(meta_f, af, x, w, b, relu, ws, c)
+            y = (_run_side(meta_f, af, x) @ w if order == "aggregate_first"
+                 else _run_side(meta_f, af, x @ w))
+            if ws is not None:
+                y = y + _self_term(x, ws, c)
+            return post(y, b)
 
-        def fwd_core(x, w, b):
+        def fwd_core(x, w, b, ws, c):
             if agg_residual:
                 agg = _run_side(meta_f, af, x)
-                y = post(agg @ w, b)
-                return y, (agg, w, y)
-            y = forward(x, w, b)
-            return y, (x, w, y)
+                y = agg @ w
+                if ws is not None:
+                    y = y + _self_term(x, ws, c)
+                y = post(y, b)
+                # the self half's dW_self/dc need x; without it the agg
+                # residual alone suffices
+                return y, (agg, x if ws is not None else None, w, ws, c, y)
+            y = forward(x, w, b, ws, c)
+            return y, (None, x, w, ws, c, y)
 
         def bwd_core(res, g):
-            lhs, w, y = res
+            agg, x, w, ws, c, y = res
             if relu:
                 g = jnp.where(y > 0, g, 0.0)
-            if agg_residual:
-                # lhs = agg = M x: dx = Mᵀ (ḡ Wᵀ) runs at width d_in and
+            if agg is not None:
+                # agg = M x: dx = Mᵀ (ḡ Wᵀ) runs at width d_in and
                 # dW = aggᵀ ḡ reuses the forward's aggregation
                 dx = _run_side(meta_b, ab, g @ w.T)
-                dw = jnp.einsum("nd,ne->de", lhs, g)
+                dw = jnp.einsum("nd,ne->de", agg, g)
             else:
-                # lhs = x: h = Mᵀ ḡ runs at width d_out, dW = Σ_v x_v ⊗ h_v
+                # h = Mᵀ ḡ runs at width d_out, dW = Σ_v x_v ⊗ h_v
                 h = _run_side(meta_b, ab, g)
                 dx = h @ w.T
-                dw = jnp.einsum("nd,ne->de", lhs, h)
-            return g, dx, dw
+                dw = jnp.einsum("nd,ne->de", x, h)
+            dws = dc = None
+            if ws is not None:
+                xtg = jnp.einsum("nd,ne->de", x, g)
+                if c is not None:
+                    cs = jnp.reshape(c, ())
+                    dx = dx + cs * (g @ ws.T)
+                    dws = cs * xtg
+                    dc = jnp.reshape(jnp.vdot(ws, xtg), jnp.shape(c))
+                else:
+                    dx = dx + g @ ws.T
+                    dws = xtg
+            return g, dx, dw, dws, dc
 
-        if has_bias:
-            @jax.custom_vjp
-            def f(x, w, b):
-                return forward(x, w, b)
+        # one fixed-arity custom_vjp covers every optional-operand combo:
+        # absent operands ride through as None (empty pytrees) and get None
+        # cotangents back
+        @jax.custom_vjp
+        def f(x, w, b, ws, c):
+            return forward(x, w, b, ws, c)
 
-            def fwd(x, w, b):
-                return fwd_core(x, w, b)
+        def fwd(x, w, b, ws, c):
+            return fwd_core(x, w, b, ws, c)
 
-            def bwd(res, g):
-                g, dx, dw = bwd_core(res, g)
-                return dx, dw, jnp.sum(g, axis=0)
-        else:
-            @jax.custom_vjp
-            def f(x, w):
-                return forward(x, w, None)
-
-            def fwd(x, w):
-                return fwd_core(x, w, None)
-
-            def bwd(res, g):
-                _, dx, dw = bwd_core(res, g)
-                return dx, dw
+        def bwd(res, g):
+            g, dx, dw, dws, dc = bwd_core(res, g)
+            db = jnp.sum(g, axis=0) if has_bias else None
+            return dx, dw, db, dws, dc
 
         f.defvjp(fwd, bwd)
         self._fns[key] = f
         return f
 
     def apply(self, x: jax.Array, w: jax.Array,
-              b: Optional[jax.Array] = None, *, relu: bool = False
+              b: Optional[jax.Array] = None, *, relu: bool = False,
+              w_self: Optional[jax.Array] = None, self_coeff=None
               ) -> jax.Array:
-        """Differentiable fused layer ``act(F(x) @ w + b)``."""
+        """Differentiable fused layer
+        ``act(F(x) @ w + self_coeff * (x @ w_self) + b)``."""
         if x.shape[0] != self.num_nodes:
             raise ValueError(f"plan compiled for {self.num_nodes} nodes but "
                              f"x has {x.shape[0]} rows (wrong graph?)")
         if w.shape != (self.d_in, self.d_out):
             raise ValueError(f"layer plan compiled for W {self.d_in}x"
                              f"{self.d_out}, got {w.shape}")
-        fn = self._layer_fn(b is not None, relu)
-        return fn(x, w) if b is None else fn(x, w, b)
+        if w_self is not None and tuple(w_self.shape) != (self.d_in,
+                                                          self.d_out):
+            raise ValueError(f"w_self must match W {self.d_in}x{self.d_out}, "
+                             f"got {w_self.shape}")
+        if self_coeff is not None and w_self is None:
+            raise ValueError("self_coeff needs w_self (the self half it "
+                             "scales)")
+        fn = self._layer_fn(b is not None, relu, w_self is not None,
+                            self_coeff is not None)
+        return fn(x, w, b, w_self, self_coeff)
 
-    def __call__(self, x, w, b=None, *, relu: bool = False) -> jax.Array:
-        return self.apply(x, w, b, relu=relu)
+    def __call__(self, x, w, b=None, *, relu: bool = False, w_self=None,
+                 self_coeff=None) -> jax.Array:
+        return self.apply(x, w, b, relu=relu, w_self=w_self,
+                          self_coeff=self_coeff)
 
     def describe(self) -> dict:
         return {"order": self.order, "fuse": self.fuse,

@@ -39,6 +39,17 @@ Three variants:
     GCN layer  relu(s_out ⊙ (A (s_in ⊙ x) [+ s_in ⊙ x]) @ W + b)  becomes ONE
     launch: the (n, d_in) aggregation result never round-trips through HBM.
 
+    The epilogue generalizes to a TWO-W form (ISSUE 5): with ``w_self`` the
+    destination-row tile of x joins the update on the MXU,
+
+        out = (s_out ⊙ acc) @ W_nbr + (self_coeff ⊙ x_tile) @ W_self + b,
+
+    where ``self_coeff`` is an optional (1, 1) SMEM scalar operand (a traced
+    model parameter, not a compile-time constant).  GraphSAGE's concat form
+    ``concat(h, F(h)) @ W == h @ W_self + F(h) @ W_nbr`` and GIN's
+    ``((1+ε) h + F(h)) @ W`` (pass ``w_self = w`` and ``self_coeff = 1+ε``)
+    each become one launch per layer.
+
 Destination blocks with zero active slots are never visited by the compacted
 grids; callers (repro.exec) fill those rows from the analytic diagonal term.
 """
@@ -251,11 +262,21 @@ def spmm_blockell_compact(rows: jax.Array, cols: jax.Array,
 # ---------------------------------------------------------------------------
 # layer kernels: SpMM + node-level update (W, bias, ReLU) in one launch
 # ---------------------------------------------------------------------------
-def _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu):
+def _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu,
+                    xself_ref=None, wself_ref=None, coeff_ref=None):
     """Shared epilogue: scale the accumulated tile, multiply by the resident
-    W tile on the MXU, add bias, apply ReLU — all in VMEM, then one store."""
+    W tile on the MXU, add bias, apply ReLU — all in VMEM, then one store.
+    With ``wself_ref`` the destination-row x tile contributes a second MXU
+    product (optionally scaled by the SMEM ``self_coeff`` scalar):
+    two-W form  out = (s_out ⊙ acc) @ W_nbr + (c ⊙ x_tile) @ W_self + b."""
     y = acc_ref[...] * sout_ref[0][:, None]
     out = jnp.dot(y, w_ref[...], preferred_element_type=jnp.float32)
+    if wself_ref is not None:
+        xs = xself_ref[...]
+        if coeff_ref is not None:
+            xs = xs * coeff_ref[0, 0]
+        out = out + jnp.dot(xs, wself_ref[...],
+                            preferred_element_type=jnp.float32)
     if bias_ref is not None:
         out = out + bias_ref[0][None, :]
     if relu:
@@ -264,10 +285,14 @@ def _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu):
 
 
 def _make_update_kernel(n_slots: int, add_diag: bool, has_bias: bool,
-                        relu: bool):
+                        relu: bool, has_self: bool = False,
+                        has_coeff: bool = False):
     def kernel(cols_ref, adj_ref, x_ref, sin_ref, sout_ref, w_ref, *rest):
         rest = list(rest)
         bias_ref = rest.pop(0) if has_bias else None
+        wself_ref = rest.pop(0) if has_self else None
+        xself_ref = rest.pop(0) if has_self else None
+        coeff_ref = rest.pop(0) if has_coeff else None
         if add_diag:
             xd_ref, sind_ref = rest.pop(0), rest.pop(0)
         o_ref, acc_ref = rest
@@ -289,7 +314,8 @@ def _make_update_kernel(n_slots: int, add_diag: bool, has_bias: bool,
 
         @pl.when(w == n_slots - 1)
         def _update():
-            _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu)
+            _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu,
+                            xself_ref, wself_ref, coeff_ref)
     return kernel
 
 
@@ -298,7 +324,8 @@ def _make_update_kernel(n_slots: int, add_diag: bool, has_bias: bool,
                                     "interpret"))
 def spmm_blockell_update(block_cols: jax.Array, blocks: jax.Array,
                          x: jax.Array, s_in: jax.Array, s_out: jax.Array,
-                         w: jax.Array, bias, *, bm: int, bk: int,
+                         w: jax.Array, bias, w_self=None, self_coeff=None,
+                         *, bm: int, bk: int,
                          add_diag: bool, relu: bool = False,
                          interpret: bool = False) -> jax.Array:
     """Padded fused LAYER: aggregation epilogue-multiplied by ``w`` in VMEM.
@@ -306,12 +333,19 @@ def spmm_blockell_update(block_cols: jax.Array, blocks: jax.Array,
     x: (C*bk, d_in); w: (d_in, d_out); bias: (1, d_out) or None; d_in and
     d_out multiples of 128 (repro.exec pads).  The aggregation accumulates in
     a VMEM scratch tile; only the (bm, d_out) updated tile is ever stored.
+    ``w_self`` (d_in, d_out) adds the two-W self term — the destination-row
+    x tile joins the epilogue, scaled by the traced (1, 1) ``self_coeff``
+    SMEM scalar when given (requires square blocks so the row tile aligns).
     Returns (R*bm, d_out).
     """
     R, W = block_cols.shape
     d_in, d_out = w.shape
     if add_diag and bm != bk:
         raise ValueError("add_diag requires square blocks (bm == bk)")
+    if w_self is not None and bm != bk:
+        raise ValueError("w_self requires square blocks (bm == bk)")
+    if self_coeff is not None and w_self is None:
+        raise ValueError("self_coeff needs w_self")
     in_specs = [
         pl.BlockSpec((1, 1, bm, bk), lambda r, s, cols: (r, s, 0, 0)),
         pl.BlockSpec((bk, d_in),
@@ -325,6 +359,14 @@ def spmm_blockell_update(block_cols: jax.Array, blocks: jax.Array,
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, d_out), lambda r, s, cols: (0, 0)))
         operands.append(bias)
+    if w_self is not None:
+        in_specs += [pl.BlockSpec((d_in, d_out), lambda r, s, cols: (0, 0)),
+                     pl.BlockSpec((bk, d_in), lambda r, s, cols: (r, 0))]
+        operands += [w_self, x]
+        if self_coeff is not None:
+            in_specs.append(pl.BlockSpec((1, 1), lambda r, s, cols: (0, 0),
+                                         memory_space=pltpu.SMEM))
+            operands.append(self_coeff)
     if add_diag:
         in_specs += [pl.BlockSpec((bk, d_in), lambda r, s, cols: (r, 0)),
                      pl.BlockSpec((1, bk), lambda r, s, cols: (r, 0))]
@@ -337,7 +379,8 @@ def spmm_blockell_update(block_cols: jax.Array, blocks: jax.Array,
         scratch_shapes=[pltpu.VMEM((bm, d_in), jnp.float32)],
     )
     return pl.pallas_call(
-        _make_update_kernel(W, add_diag, bias is not None, relu),
+        _make_update_kernel(W, add_diag, bias is not None, relu,
+                            w_self is not None, self_coeff is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R * bm, d_out), x.dtype),
         interpret=interpret,
@@ -345,11 +388,15 @@ def spmm_blockell_update(block_cols: jax.Array, blocks: jax.Array,
 
 
 def _make_update_compact_kernel(n_active: int, add_diag: bool, has_bias: bool,
-                                relu: bool):
+                                relu: bool, has_self: bool = False,
+                                has_coeff: bool = False):
     def kernel(rows_ref, cols_ref, adj_ref, x_ref, sin_ref, sout_ref, w_ref,
                *rest):
         rest = list(rest)
         bias_ref = rest.pop(0) if has_bias else None
+        wself_ref = rest.pop(0) if has_self else None
+        xself_ref = rest.pop(0) if has_self else None
+        coeff_ref = rest.pop(0) if has_coeff else None
         if add_diag:
             xd_ref, sind_ref = rest.pop(0), rest.pop(0)
         o_ref, acc_ref = rest
@@ -372,7 +419,8 @@ def _make_update_compact_kernel(n_active: int, add_diag: bool, has_bias: bool,
 
         @pl.when(last)
         def _update():
-            _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu)
+            _layer_epilogue(acc_ref, sout_ref, w_ref, bias_ref, o_ref, relu,
+                            xself_ref, wself_ref, coeff_ref)
     return kernel
 
 
@@ -382,20 +430,27 @@ def _make_update_compact_kernel(n_active: int, add_diag: bool, has_bias: bool,
 def spmm_blockell_update_compact(rows: jax.Array, cols: jax.Array,
                                  blocks: jax.Array, x: jax.Array,
                                  s_in: jax.Array, s_out: jax.Array,
-                                 w: jax.Array, bias, *, bm: int, bk: int,
+                                 w: jax.Array, bias, w_self=None,
+                                 self_coeff=None, *, bm: int, bk: int,
                                  n_row_blocks: int, add_diag: bool,
                                  relu: bool = False,
                                  interpret: bool = False) -> jax.Array:
     """Slot-compacted fused LAYER: grid is exactly ``n_active`` steps and each
     destination block's last step runs the W-update epilogue before its one
-    (bm, d_out) store.  Rows whose destination block has no active slot are
-    left unwritten — repro.exec fills them with the diagonal-term update.
+    (bm, d_out) store.  ``w_self``/``self_coeff`` add the two-W self term
+    exactly as in :func:`spmm_blockell_update`.  Rows whose destination block
+    has no active slot are left unwritten — repro.exec fills them with the
+    diagonal/self-term update.
     """
     n_active = rows.shape[0]
     R = n_row_blocks
     d_in, d_out = w.shape
     if add_diag and bm != bk:
         raise ValueError("add_diag requires square blocks (bm == bk)")
+    if w_self is not None and bm != bk:
+        raise ValueError("w_self requires square blocks (bm == bk)")
+    if self_coeff is not None and w_self is None:
+        raise ValueError("self_coeff needs w_self")
     if n_active == 0:
         raise ValueError("empty compaction; caller handles n_active == 0")
     in_specs = [
@@ -410,6 +465,17 @@ def spmm_blockell_update_compact(rows: jax.Array, cols: jax.Array,
         in_specs.append(pl.BlockSpec((1, d_out),
                                      lambda i, rows, cols: (0, 0)))
         operands.append(bias)
+    if w_self is not None:
+        in_specs += [pl.BlockSpec((d_in, d_out),
+                                  lambda i, rows, cols: (0, 0)),
+                     pl.BlockSpec((bk, d_in),
+                                  lambda i, rows, cols: (rows[i], 0))]
+        operands += [w_self, x]
+        if self_coeff is not None:
+            in_specs.append(pl.BlockSpec((1, 1),
+                                         lambda i, rows, cols: (0, 0),
+                                         memory_space=pltpu.SMEM))
+            operands.append(self_coeff)
     if add_diag:
         in_specs += [pl.BlockSpec((bk, d_in),
                                   lambda i, rows, cols: (rows[i], 0)),
@@ -424,7 +490,8 @@ def spmm_blockell_update_compact(rows: jax.Array, cols: jax.Array,
     )
     return pl.pallas_call(
         _make_update_compact_kernel(n_active, add_diag, bias is not None,
-                                    relu),
+                                    relu, w_self is not None,
+                                    self_coeff is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R * bm, d_out), x.dtype),
         interpret=interpret,

@@ -37,31 +37,32 @@ def gnn_driver(arch: str, steps: int, ckpt: str, executor: str = "auto"):
     g = cora_like().permute(minhash_reorder(cora_like()))
     exec_plan = None
     layer_plans = None
-    if bundle.arch == "gcn" and executor in ("auto", "fused"):
-        # default hot path: hierarchical layer fusion — each layer is one
-        # LayerExecutionPlan; "auto" autotunes the joint (order, fuse,
-        # backend, block shape, compaction) space per layer shape and caches
-        # the verdicts on disk, "fused" trusts the FLOP/byte order model
-        from ..exec import autotune_layer_plan, build_layer_plan
+    if bundle.arch == "gcn" and executor in ("auto", "forward", "fused"):
+        # default hot path: WHOLE-FORWARD scheduling — the repro.exec DP
+        # picks every layer's (order, fuse, backend, bm, compact) jointly.
+        # "auto"/"forward" additionally race the DP schedule against the
+        # per-layer-greedy and cold-model schedules as measured whole-chain
+        # fwd+bwd passes and cache the verdict on disk; "fused" trusts the
+        # DP over the cache/FLOP-byte model without measuring
+        from ..exec import autotune_forward, plan_forward, gcn_chain
         dims = [g.node_feat.shape[1], *bundle.model_kw["hidden"],
                 bundle.n_classes]
-        n_layers = len(dims) - 1
-        layer_plans, gplan = [], None
-        for i in range(n_layers):
-            if executor == "auto":
-                lp, rec = autotune_layer_plan(
-                    g, dims[i], dims[i + 1], "gcn", relu=i + 1 < n_layers,
-                    gplan=gplan)
-                print(f"layer {i} ({dims[i]}->{dims[i + 1]}) autotune: "
-                      f"order={rec.order} fuse={rec.fuse} {rec.backend} "
-                      f"bm={rec.bm} compact={rec.compact} {rec.us:.0f}us "
-                      f"model_order={rec.model_order}"
-                      f"{' (cached)' if rec.from_cache else ''}")
-            else:
-                lp = build_layer_plan(g, "gcn", d_in=dims[i],
-                                      d_out=dims[i + 1], gplan=gplan)
-            gplan = lp.gplan
-            layer_plans.append(lp)
+        specs = gcn_chain(dims)
+        if executor in ("auto", "forward"):
+            layer_plans, rec = autotune_forward(g, specs)
+            greedy = rec.greedy_us
+            print(f"forward autotune: schedule={rec.source} "
+                  f"{rec.us:.0f}us whole-chain"
+                  + (f" (per-layer-greedy {greedy:.0f}us, "
+                     f"{rec.speedup_vs_greedy:.2f}x)"
+                     if greedy is not None else "")
+                  + (" (cached)" if rec.from_cache else ""))
+        else:
+            layer_plans = plan_forward(g, specs)
+        for i, (s, lp) in enumerate(zip(specs, layer_plans.layers)):
+            print(f"layer {i} ({s.d_in}->{s.d_out}): order={lp.order} "
+                  f"fuse={lp.fuse} {lp.backend} bm={lp.gplan.bm} "
+                  f"compact={lp.gplan.compact}")
     elif bundle.arch == "gcn" and executor == "blockell":
         # the PR 3 path: fused aggregation, separate update matmul
         from ..exec import build_plan
@@ -121,15 +122,18 @@ def main(argv=None):
                     help="number of graph shards for --dist "
                          "(default: device count)")
     ap.add_argument("--executor", default="auto",
-                    choices=["auto", "segment", "blockell", "fused"],
-                    help="GNN execution engine: 'fused' compiles each layer "
-                         "into a repro.exec LayerExecutionPlan (aggregation "
-                         "+ update matmul as one scheduled op, computation "
-                         "order from the FLOP/byte model); 'auto' "
-                         "additionally autotunes the joint (order, fusion, "
-                         "backend, block shape, compaction) space per layer "
-                         "and caches verdicts on disk; 'blockell' keeps the "
-                         "PR 3 aggregation-only plan + separate matmul")
+                    choices=["auto", "segment", "blockell", "fused",
+                             "forward"],
+                    help="GNN execution engine: 'forward' (and 'auto', "
+                         "which prefers it) schedules the WHOLE forward — "
+                         "a repro.exec DP picks every layer's (order, "
+                         "fusion, backend, block shape, compaction) jointly "
+                         "and races the schedule against per-layer-greedy "
+                         "as measured whole-chain fwd+bwd, caching the "
+                         "verdict on disk; 'fused' trusts the DP over the "
+                         "cache/FLOP-byte model without measuring; "
+                         "'blockell' keeps the PR 3 aggregation-only plan "
+                         "+ separate matmul")
     args = ap.parse_args(argv)
     spec = get(args.arch)
     if args.dist:

@@ -66,8 +66,11 @@ def _aggregate(x, graph, executor: str, plan=None, ell=None):
 
 
 def _layer_plans_for(ell, params, mode: str):
-    """Validate a per-layer ``repro.exec.LayerExecutionPlan`` sequence."""
+    """Validate a per-layer ``repro.exec.LayerExecutionPlan`` sequence (a
+    ``repro.exec.ForwardExecutionPlan`` unwraps to its scheduled layers)."""
     layers = params["layers"]
+    if hasattr(ell, "layers") and hasattr(ell, "configs"):
+        ell = ell.layers                    # ForwardExecutionPlan
     plans = list(ell) if isinstance(ell, (list, tuple)) else None
     if plans is None or len(plans) != len(layers) or not all(
             hasattr(lp, "apply") and hasattr(lp, "order") for lp in plans):
@@ -90,11 +93,20 @@ def gcn_apply(params, x: jax.Array, graph: Dict[str, Any],
     if executor == "fused":
         # hierarchical fusion: each layer (aggregate + update + bias + ReLU)
         # is ONE LayerExecutionPlan call with autotuned computation order
+        plans = _layer_plans_for(ell, params, "gcn")
         if act is not jax.nn.relu:
-            raise ValueError("executor='fused' layer plans only fuse ReLU; "
-                             "use another executor for a custom activation")
-        for i, (p, lp) in enumerate(zip(params["layers"],
-                                        _layer_plans_for(ell, params, "gcn"))):
+            # the layer kernels only fuse ReLU: run each layer through its
+            # graph plan (fused aggregation, unfused update + act) instead
+            import warnings
+            warnings.warn("executor='fused' layer plans only fuse ReLU; "
+                          "falling back to the per-layer graph-plan path "
+                          "for this activation", stacklevel=2)
+            for i, (p, lp) in enumerate(zip(params["layers"], plans)):
+                h = linear_apply(p, lp.gplan.apply(h))
+                if i + 1 < n_layers:
+                    h = act(h)
+            return h
+        for i, (p, lp) in enumerate(zip(params["layers"], plans)):
             h = lp.apply(h, p["w"], p.get("b"), relu=i + 1 < n_layers)
         return h
     for i, p in enumerate(params["layers"]):

@@ -4,10 +4,13 @@ evaluation models (§V-A, PyG defaults: SAGE 2x sageConv h=256; GIN 5 conv +
 
 Both expose an ``executor`` switch so the Rubik scheduling strategies
 (Index / LR / LR&CR) run through identical model code — the Fig. 8/9
-benchmarks flip only the plan.  ``executor="fused"`` (SAGE) takes ``plan`` as
-a per-layer list of ``repro.exec.LayerExecutionPlan``: the neighbor half of
-each SAGE matmul folds into the graph-level aggregation with autotuned
-computation order.
+benchmarks flip only the plan.  ``executor="fused"`` takes ``plan`` as a
+per-layer list of ``repro.exec.LayerExecutionPlan`` (or a
+``repro.exec.ForwardExecutionPlan``, whose layers are DP-scheduled jointly):
+with the generalized two-W / self-coeff epilogue each SAGE layer
+(``h @ W_self + mean_N(h) @ W_nbr + b``) and each GIN conv's first MLP layer
+(``((1+ε) h + sum_N(h)) @ W1 + b1``, traced ε) is ONE plan call — one kernel
+launch per layer on the fused Pallas backend.
 """
 from __future__ import annotations
 
@@ -54,17 +57,24 @@ def sage_apply(params, x, graph, executor="segment", plan=None,
             # layer plans (repro.exec.LayerExecutionPlan, mode "mean"), one
             # per layer: W splits into its self and neighbor halves, so
             #   concat(h, mean_N(h)) @ W + b == h @ W_self + F(h) @ W_nbr + b
-            # and the neighbor half is one fused, order-autotuned plan call
+            # — ONE two-W plan call (one fused launch; ReLU folds in too
+            # when it is the activation)
+            # plan indexes per layer: a list/tuple or a ForwardExecutionPlan
+            # (whose __getitem__ returns its scheduled LayerExecutionPlans)
             lp = plan[i]
             if lp.mode != "mean":
                 raise ValueError(f"layer plan mode {lp.mode!r} != 'mean'")
             d_self = p["w"].shape[0] // 2
-            h = h @ p["w"][:d_self] + lp.apply(h, p["w"][d_self:], p.get("b"))
+            fuse_act = act is jax.nn.relu and i + 1 < L
+            h = lp.apply(h, p["w"][d_self:], p.get("b"),
+                         w_self=p["w"][:d_self], relu=fuse_act)
+            if not fuse_act and i + 1 < L:
+                h = act(h)
         else:
             nbr = _agg(h, graph, "mean", executor, plan)
             h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
-        if i + 1 < L:
-            h = act(h)
+            if i + 1 < L:
+                h = act(h)
         # L2 normalize as in the paper
         h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
     return h
@@ -123,10 +133,27 @@ def gin_apply(params, x, graph, executor="segment", plan=None,
               act=jax.nn.relu, graph_ids=None, num_graphs: Optional[int] = None,
               node_mask=None):
     h = x
-    for c in params["convs"]:
-        nbr = _agg(h, graph, "sum", executor, plan)
-        h = mlp_apply(c["mlp"], (1.0 + c["eps"]) * h + nbr, act=act,
-                      final_act=act)
+    for ci, c in enumerate(params["convs"]):
+        if executor == "fused":
+            # mode-"sum" layer plans, one per conv: the traced (1+ε) self
+            # coefficient and the first MLP layer fold into the aggregation,
+            #   ((1+ε) h + sum_N(h)) @ W1 + b1
+            # as ONE self-coeff plan call (w_self = W1); the MLP's remaining
+            # layer stays a dense matmul
+            lp = plan[ci]
+            if lp.mode != "sum":
+                raise ValueError(f"layer plan mode {lp.mode!r} != 'sum'")
+            m0 = c["mlp"][0]
+            fuse_act = act is jax.nn.relu
+            h = lp.apply(h, m0["w"], m0.get("b"), w_self=m0["w"],
+                         self_coeff=1.0 + c["eps"], relu=fuse_act)
+            if not fuse_act:
+                h = act(h)
+            h = mlp_apply(c["mlp"][1:], h, act=act, final_act=act)
+        else:
+            nbr = _agg(h, graph, "sum", executor, plan)
+            h = mlp_apply(c["mlp"], (1.0 + c["eps"]) * h + nbr, act=act,
+                          final_act=act)
     if graph_ids is not None:  # graph classification readout (paper datasets)
         if node_mask is not None:
             h = h * node_mask[:, None]

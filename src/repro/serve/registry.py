@@ -107,19 +107,22 @@ class GNNSession:
         self._layer_cache: Optional[List[np.ndarray]] = None
         # the offline full-graph passes (oracle rows + warm payloads) run on
         # the compiled exec engines; "segment" keeps the reference path.
-        # "fused" (default) compiles ONE LayerExecutionPlan per layer — the
-        # same layer plans the training executor uses, with computation
-        # order picked by the FLOP/byte model — all sharing one graph plan.
+        # "fused" (default) compiles the WHOLE forward through
+        # repro.exec.plan_forward: the DP over the layer chain picks every
+        # layer's (order, fuse, backend, bm, compact) jointly — measured
+        # costs when the autotune cache is warm, the FLOP/byte model when
+        # cold — and layers with matching configs share one graph plan.
+        # SAGE layers use the two-W epilogue (one plan call per layer).
         mode = "gcn" if kind == "gcn" else "mean"
         self._plan = None
+        self._fplan = None
         self._layer_plans = None
         if executor == "fused":
-            from ..exec import build_plan, build_layer_plan
-            gplan = build_plan(g, mode)
-            self._layer_plans = [
-                build_layer_plan(g, mode, d_in=self.dims[i],
-                                 d_out=self.dims[i + 1], gplan=gplan)
-                for i in range(len(self.dims) - 1)]
+            from ..exec import plan_forward, gcn_chain, sage_chain
+            specs = (gcn_chain(self.dims) if kind == "gcn"
+                     else sage_chain(self.dims))
+            self._fplan = plan_forward(g, specs)
+            self._layer_plans = self._fplan.layers
         elif executor == "blockell":
             from ..exec import build_plan
             self._plan = build_plan(g, mode)
@@ -178,8 +181,9 @@ class GNNSession:
         serving path), capturing each layer's output as the next layer
         consumes it — post-activation for non-final layers.  These are the
         oracle rows and the payloads ``warm`` preloads.  With the default
-        ``executor="fused"`` each layer is one LayerExecutionPlan call — the
-        oracle is produced by the very plans the training path runs."""
+        ``executor="fused"`` each layer is one call into the DP-scheduled
+        ForwardExecutionPlan — the oracle is produced by the very plans the
+        training path runs (SAGE through the two-W epilogue)."""
         from ..models.gcn import _aggregate
         from ..models.sage_gin import _agg
 
@@ -206,15 +210,18 @@ class GNNSession:
                 graph["edge_mask"] = jnp.asarray(self.g.edge_mask)
             for i, p in enumerate(self.params["layers"]):
                 if lps is not None:
+                    # the two-W epilogue: self and neighbor halves of the
+                    # concat-form W in ONE plan call (ReLU folded in)
                     d_self = p["w"].shape[0] // 2
-                    h = (h @ p["w"][:d_self]
-                         + lps[i].apply(h, p["w"][d_self:], p.get("b")))
+                    h = lps[i].apply(h, p["w"][d_self:], p.get("b"),
+                                     w_self=p["w"][:d_self],
+                                     relu=i + 1 < L)
                 else:
                     nbr = (self._plan.apply(h) if self._plan is not None
                            else _agg(h, graph, "mean"))
                     h = linear_apply(p, jnp.concatenate([h, nbr], axis=-1))
-                if i + 1 < L:
-                    h = jax.nn.relu(h)
+                    if i + 1 < L:
+                        h = jax.nn.relu(h)
                 h = h / jnp.maximum(
                     jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
                 vals.append(np.asarray(h))

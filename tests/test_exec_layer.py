@@ -341,13 +341,20 @@ def test_default_layer_candidates_platforms():
                    for o, _, b, _, _ in wide_out)
 
 
-def test_gcn_fused_rejects_non_relu_activation():
-    g = GRAPHS["random"]
+def test_gcn_fused_custom_activation_falls_back():
+    """The layer kernels only fuse ReLU: a custom activation warns once and
+    runs each layer through its graph plan instead of erroring."""
+    g = synthesize(DatasetSpec("fb", 300, 1800, 16, 4, community=0.9,
+                               num_communities=5, seed=8))
+    graph = make_graph_inputs(g)
     params = gcn_init(KEY, [16, 8, 4])
-    x = jnp.zeros((g.num_nodes, 16), jnp.float32)
+    x = jnp.asarray(g.node_feat)
     gplan = build_plan(g, "gcn", bm=64, backend="coo")
     plans = [build_layer_plan(g, "gcn", d_in=16, d_out=8, gplan=gplan),
              build_layer_plan(g, "gcn", d_in=8, d_out=4, gplan=gplan)]
-    with pytest.raises(ValueError, match="only fuse ReLU"):
-        gcn_apply(params, x, {}, executor="fused", ell=plans,
-                  act=jax.nn.elu)
+    ref = gcn_apply(params, x, graph, executor="segment", act=jax.nn.elu)
+    with pytest.warns(UserWarning, match="only fuse ReLU"):
+        got = gcn_apply(params, x, graph, executor="fused", ell=plans,
+                        act=jax.nn.elu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
