@@ -3,7 +3,11 @@ timers, CSV emission (name,us_per_call,derived per the harness contract).
 
 Every ``emit`` also lands in the module-level ``RESULTS`` list so
 ``run.py --json PATH`` can dump a machine-readable record of the whole run
-(the ``BENCH_*.json`` trajectory); pass structured extras as keyword args."""
+(the ``BENCH_*.json`` trajectory); pass structured extras as keyword args.
+The dump rides the :mod:`repro.obs` schemas — a ``repro.obs/provenance@1``
+header (git SHA, ISO timestamp, device kind, jax version) and one
+``repro.obs/event@1`` record per result — so BENCH files, ``--metrics-out``
+dumps, and traces share one vocabulary and one identity stamp."""
 from __future__ import annotations
 
 import json
@@ -13,6 +17,7 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
+from repro import obs
 from repro.graph import synthesize, DatasetSpec
 
 # CPU-scale stand-ins preserving each paper dataset's degree/feature regime.
@@ -75,17 +80,23 @@ def emit(name: str, us: float, derived: str = "", **extra) -> None:
 
 
 def dump_results(path: str) -> None:
-    """Write everything emitted so far as one JSON document."""
-    try:
-        import jax
-        backend = jax.default_backend()
-    except Exception:
-        backend = "unknown"
+    """Write everything emitted so far as one JSON document.
+
+    Results are ``repro.obs/event@1`` records under a
+    ``repro.obs/provenance@1`` header; the legacy top-level keys
+    (``timestamp``/``platform``/``jax_backend``) and per-result fields
+    (``name``/``us_per_call``/``derived``) are preserved, so pre-existing
+    consumers keep working while new ones get git SHA + device kind."""
+    prov = obs.provenance()
     doc = {
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "provenance": prov,
+        "timestamp": prov["ts"],
         "platform": platform.platform(),
-        "jax_backend": backend,
-        "results": RESULTS,
+        "jax_backend": prov["jax_backend"],
+        "results": [obs.event(rec["name"],
+                              **{k: v for k, v in rec.items()
+                                 if k != "name"})
+                    for rec in RESULTS],
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

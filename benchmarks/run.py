@@ -7,7 +7,10 @@ bench can be iterated on without paying for the whole suite.
 
 ``--json PATH`` additionally dumps every emitted row (with any structured
 extras the bench attached) as one machine-readable document — the repo's
-``BENCH_*.json`` trajectory comes from committing these.
+``BENCH_*.json`` trajectory comes from committing these.  The document is
+stamped with ``repro.obs`` provenance (git SHA, ISO timestamp, device kind,
+jax version) and each row rides the ``repro.obs/event@1`` schema, so BENCH
+files and ``--metrics-out`` dumps share one vocabulary.
 """
 from __future__ import annotations
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -22,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from . import compat  # noqa: F401
+from .. import obs
 from ..graph.partition import HaloPlan, build_halo_plan
 from ..graph.structure import Graph
 from ..train.optimizer import adam, apply_updates, clip_by_global_norm
@@ -170,13 +172,19 @@ def train_distributed(arch: str = "gcn-cora", steps: int = 20,
                            [g.node_feat.shape[1], hidden, n_classes])
     opt = adam(lr)
     opt_state = opt.init(params)
+    obs.gauge("dist.parts").set(parts)
     with mesh:
         step = make_dist_train_step(mesh, plan, send, local_n, opt,
                                     aggregator)
         losses = []
+        step_hist = obs.histogram("dist.step_seconds")
         for _ in range(steps):
-            params, opt_state, loss = step(params, opt_state, batch)
-            losses.append(float(loss))
+            with obs.span("dist.step", cat="dist", aggregator=aggregator):
+                t0 = time.perf_counter()
+                params, opt_state, loss = step(params, opt_state, batch)
+                losses.append(float(loss))
+            step_hist.observe(time.perf_counter() - t0)
+        obs.counter("dist.steps").inc(steps)
     log(f"dist[{arch}]: {steps} steps, loss {losses[0]:.4f} -> "
         f"{losses[-1]:.4f}")
     return {"losses": losses, "collective_estimate": est, "params": params}

@@ -19,6 +19,7 @@ from typing import Dict
 
 import numpy as np
 
+from .. import obs
 from ..graph.partition import HaloPlan
 
 
@@ -97,8 +98,12 @@ def build_send_plan(plan: HaloPlan, pair_capacity: int | None = None
         send_mask[q, p, :n] = True
         recv_slot[p, q, :n] = slots
         recv_mask[p, q, :n] = True
-    return SendPlan(send_idx=send_idx, send_mask=send_mask,
-                    recv_slot=recv_slot, recv_mask=recv_mask)
+    sp = SendPlan(send_idx=send_idx, send_mask=send_mask,
+                  recv_slot=recv_slot, recv_mask=recv_mask)
+    obs.gauge("dist.send_plan.pair_capacity").set(sp.pair_capacity)
+    obs.gauge("dist.send_plan.rows_per_chip").set(
+        float(sp.rows_received().mean()))
+    return sp
 
 
 def collective_bytes_estimate(plan: HaloPlan, send: SendPlan, d: int,
@@ -120,7 +125,7 @@ def collective_bytes_estimate(plan: HaloPlan, send: SendPlan, d: int,
     allgather_rows = n - n / Pn
     real = float(real_rows.mean()) * row_bytes
     allgather = allgather_rows * row_bytes
-    return {
+    est = {
         "cut_edge_fraction": plan.halo_fraction,
         "halo_rows_per_chip": float(real_rows.mean()),
         "halo_rows_per_chip_max": float(real_rows.max()),
@@ -129,3 +134,14 @@ def collective_bytes_estimate(plan: HaloPlan, send: SendPlan, d: int,
         "allgather_bytes_per_chip": allgather,
         "reduction_vs_allgather": allgather / max(real, 1e-9),
     }
+    if obs.enabled():
+        obs.gauge("dist.cut_edge_fraction").set(est["cut_edge_fraction"])
+        obs.gauge("dist.halo.bytes_per_chip").set(
+            est["halo_bytes_per_chip_real"])
+        obs.gauge("dist.halo.bytes_per_chip_padded").set(
+            est["halo_bytes_per_chip_padded"])
+        obs.gauge("dist.allgather.bytes_per_chip").set(
+            est["allgather_bytes_per_chip"])
+        obs.gauge("dist.reduction_vs_allgather").set(
+            est["reduction_vs_allgather"])
+    return est

@@ -41,7 +41,7 @@ shape as one joint space in the same fingerprinted disk cache.
 from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
                    build_layer_plan, choose_order, layer_order_costs)
 from .autotune import (autotune, autotune_plan, autotune_layer,
-                       autotune_layer_plan, graph_fingerprint,
+                       autotune_layer_plan, graph_fingerprint, device_sig,
                        AutotuneRecord, LayerAutotuneRecord,
                        default_candidates, default_layer_candidates,
                        cached_layer_costs, prune_cache, CACHE_MAX_ENTRIES)

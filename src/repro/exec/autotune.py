@@ -18,6 +18,20 @@ fingerprinted disk cache.  The FLOP/byte model (:func:`repro.exec.plan.
 choose_order`) supplies the prior; the measurement validates or overrules it
 and the record keeps both verdicts.
 
+Cache keys carry a **device signature** (:func:`device_sig` — the JAX
+backend plus ``jax.devices()[0].device_kind``), so a verdict measured on one
+accelerator generation is never silently reused on another (TPU v4 and v5
+get distinct keys).  Where the device kind merely repeats the backend name
+(CPU), the signature collapses to the bare backend, so pre-existing entries
+keyed the old way remain valid there; entries from other devices simply miss
+and are re-measured, then age out of the pruned document.
+
+Every trial runs under a :mod:`repro.obs` span (``exec.autotune.trial`` with
+backend/bm/compact — and order/fuse for layer trials — attributes, plus the
+measured microseconds and the ``traffic_model`` modeled HBM bytes per
+launch), and cache hits/misses are counted, so a trace of a tuning run shows
+exactly where the budget went.
+
 Cache location: ``$REPRO_EXEC_CACHE`` or ``~/.cache/repro/exec``.
 """
 from __future__ import annotations
@@ -26,6 +40,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -34,6 +49,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
+from ..core.blocksparse import traffic_model
 from ..graph.structure import Graph
 from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
                    build_layer_plan, choose_order)
@@ -54,6 +71,29 @@ def default_candidates(platform: Optional[str] = None) -> List[Candidate]:
     return [("coo", 128, True),
             ("jnp", 16, True), ("jnp", 32, True), ("jnp", 64, True),
             ("jnp", 128, True), ("jnp", 128, False)]
+
+
+def _device_kind() -> str:
+    """``device_kind`` of device 0 (monkeypatchable in tests), tolerant."""
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
+
+
+def device_sig(platform: Optional[str] = None) -> str:
+    """Backend + device-kind cache-key component, e.g. ``"tpu-TPU-v4"``.
+
+    Collapses to the bare backend name when the device kind just repeats it
+    (CPU: kind ``"cpu"`` on backend ``"cpu"``), which keeps old entries
+    valid there; everywhere else the kind distinguishes accelerator
+    generations, so verdicts never migrate across device kinds silently.
+    """
+    platform = platform or jax.default_backend()
+    kind = re.sub(r"[^A-Za-z0-9._-]+", "-", _device_kind().strip())
+    if kind.lower() == platform.lower() or kind == "unknown":
+        return platform
+    return f"{platform}-{kind}"
 
 
 def graph_fingerprint(g: Graph) -> str:
@@ -159,9 +199,8 @@ def cached_layer_costs(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
     on this platform — regardless of which candidate SET each run raced.
     The whole-forward DP (:mod:`repro.exec.forward`) uses this as its warm
     per-edge cost oracle; an empty dict means the layer is cold."""
-    platform = platform or jax.default_backend()
     prefix = (f"{graph_fingerprint(g)}:layer:{d_in}x{d_out}:{mode}:"
-              f"r{int(relu)}b{int(bias)}:{platform}:")
+              f"r{int(relu)}b{int(bias)}:{device_sig(platform)}:")
     out: Dict[LayerCandidate, float] = {}
     for key, e in _cache_load(_cache_path(cache_dir)).items():
         if not key.startswith(prefix):
@@ -176,6 +215,20 @@ def cached_layer_costs(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
 
 
 # --------------------------------------------------------------- measuring
+def _modeled_traffic(plan: GraphExecutionPlan, d: int) -> dict:
+    """Modeled HBM bytes per launch for a trial span — only when the plan
+    already carries a block-ELL layout (coo plans build it lazily; forcing
+    the build just to annotate a span would be paying for the telemetry)."""
+    if not obs.enabled() or getattr(plan, "_ell", None) is None:
+        return {}
+    try:
+        t = traffic_model(plan._ell, d)
+        return {"modeled_gather_bytes": int(t["gather_bytes"]),
+                "modeled_blockell_bytes": int(t["blockell_bytes"])}
+    except Exception:
+        return {}
+
+
 def _time_fwd_bwd(plan: GraphExecutionPlan, x: jax.Array,
                   iters: int = 3, warmup: int = 1) -> float:
     """Median microseconds of one jitted forward+backward through the plan."""
@@ -206,27 +259,34 @@ def autotune(g: Graph, d: int, mode: str = "gcn", *,
     # the candidate set is part of the key: a cached verdict must never
     # hand back a config the caller explicitly excluded
     cand_sig = hashlib.sha1(repr(sorted(cands)).encode()).hexdigest()[:8]
-    key = f"{graph_fingerprint(g)}:{d}:{mode}:{platform}:{cand_sig}"
+    key = f"{graph_fingerprint(g)}:{d}:{mode}:{device_sig(platform)}:{cand_sig}"
     path = _cache_path(cache_dir)
     entries = _cache_load(path)
     if not force and key in entries:
+        obs.counter("exec.autotune.cache", result="hit").inc()
         e = entries[key]
         return AutotuneRecord(key=key, backend=e["backend"], bm=e["bm"],
                               compact=e["compact"], us=e["us"],
                               table=tuple(tuple(r) for r in e.get("table", ())),
                               from_cache=True)
+    obs.counter("exec.autotune.cache", result="miss").inc()
 
     x = jnp.asarray(np.random.default_rng(seed)
                     .standard_normal((g.num_nodes, d)).astype(np.float32))
     table: List[Tuple[str, int, bool, float]] = []
     best: Optional[Tuple[float, Candidate]] = None
     for backend, bm, compact in cands:
-        try:
-            plan = build_plan(g, mode, bm=bm, bk=bm, backend=backend,
-                              compact=compact)
-            us = _time_fwd_bwd(plan, x, iters=iters)
-        except Exception:     # a candidate failing to build/run just loses
-            continue
+        with obs.span("exec.autotune.trial", cat="exec", backend=backend,
+                      bm=bm, compact=compact, d=d, mode=mode) as sp:
+            try:
+                plan = build_plan(g, mode, bm=bm, bk=bm, backend=backend,
+                                  compact=compact)
+                us = _time_fwd_bwd(plan, x, iters=iters)
+            except Exception:  # a candidate failing to build/run just loses
+                sp.set(failed=True)
+                continue
+            sp.set(us=us, **_modeled_traffic(plan, d))
+        obs.counter("exec.autotune.trials").inc()
         table.append((backend, bm, compact, us))
         if best is None or us < best[0]:
             best = (us, (backend, bm, compact))
@@ -351,10 +411,11 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
     cand_sig = hashlib.sha1(repr(sorted(cands)).encode()).hexdigest()[:8]
     model_order = choose_order(g.num_nodes, g.num_valid_edges, d_in, d_out)
     key = (f"{graph_fingerprint(g)}:layer:{d_in}x{d_out}:{mode}:"
-           f"r{int(relu)}b{int(bias)}:{platform}:{cand_sig}")
+           f"r{int(relu)}b{int(bias)}:{device_sig(platform)}:{cand_sig}")
     path = _cache_path(cache_dir)
     entries = _cache_load(path)
     if not force and key in entries:
+        obs.counter("exec.autotune.cache", result="hit").inc()
         e = entries[key]
         return LayerAutotuneRecord(
             key=key, order=e["order"], fuse=e["fuse"], backend=e["backend"],
@@ -362,6 +423,7 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
             model_order=e.get("model_order", model_order),
             table=tuple(tuple(r) for r in e.get("table", ())),
             from_cache=True)
+    obs.counter("exec.autotune.cache", result="miss").inc()
 
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.standard_normal((g.num_nodes, d_in))
@@ -375,17 +437,24 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
     table: List[Tuple[str, bool, str, int, bool, float]] = []
     best = None
     for order, fuse, backend, bm, compact in cands:
-        try:
-            gkey = (backend, bm, compact)
-            if gkey not in gplans:
-                gplans[gkey] = build_plan(g, mode, bm=bm, bk=bm,
-                                          backend=backend, compact=compact)
-            lp = build_layer_plan(g, mode, d_in=d_in, d_out=d_out,
-                                  order=order, fuse=fuse,
-                                  gplan=gplans[gkey])
-            us = _time_layer_fwd_bwd(lp, x, w, b, relu, iters=iters)
-        except Exception:     # a candidate failing to build/run just loses
-            continue
+        with obs.span("exec.autotune.trial", cat="exec", backend=backend,
+                      bm=bm, compact=compact, order=order, fuse=fuse,
+                      d_in=d_in, d_out=d_out, mode=mode) as sp:
+            try:
+                gkey = (backend, bm, compact)
+                if gkey not in gplans:
+                    gplans[gkey] = build_plan(g, mode, bm=bm, bk=bm,
+                                              backend=backend,
+                                              compact=compact)
+                lp = build_layer_plan(g, mode, d_in=d_in, d_out=d_out,
+                                      order=order, fuse=fuse,
+                                      gplan=gplans[gkey])
+                us = _time_layer_fwd_bwd(lp, x, w, b, relu, iters=iters)
+            except Exception:  # a candidate failing to build/run just loses
+                sp.set(failed=True)
+                continue
+            sp.set(us=us, **_modeled_traffic(gplans[gkey], d_out))
+        obs.counter("exec.autotune.trials").inc()
         table.append((order, fuse, backend, bm, compact, us))
         if best is None or us < best[0]:
             best = (us, (order, fuse, backend, bm, compact))

@@ -49,11 +49,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..graph.structure import Graph
 from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
                    build_layer_plan, layer_order_costs)
 from .autotune import (LayerCandidate, autotune_layer, cached_layer_costs,
-                       default_layer_candidates, graph_fingerprint,
+                       default_layer_candidates, device_sig,
+                       graph_fingerprint,
                        _cache_path, _cache_load, _cache_put)
 
 SELF_KINDS = ("none", "two_w", "self_coeff")
@@ -412,14 +414,17 @@ def plan_forward(g: Graph, specs: Sequence[LayerSpec], *,
     the cache when warm, the FLOP/byte model when cold).  This is what a
     serve session or ``--executor fused`` pays at build time; use
     :func:`autotune_forward` to validate the schedule by measurement."""
-    oracle = build_cost_oracle(g, specs, candidates=candidates,
-                               cache_dir=cache_dir, use_cache=use_cache)
-    cost, configs = dp_schedule(oracle)
-    source = ("dp-measured" if use_cache and all(s == "measured"
-                                                for s in oracle.sources)
-              else "dp-model" if not use_cache or not any(
-                  s == "measured" for s in oracle.sources)
-              else "dp-mixed")
+    with obs.span("exec.forward.dp_schedule", cat="exec",
+                  layers=len(tuple(specs))) as sp:
+        oracle = build_cost_oracle(g, specs, candidates=candidates,
+                                   cache_dir=cache_dir, use_cache=use_cache)
+        cost, configs = dp_schedule(oracle)
+        source = ("dp-measured" if use_cache and all(s == "measured"
+                                                    for s in oracle.sources)
+                  else "dp-model" if not use_cache or not any(
+                      s == "measured" for s in oracle.sources)
+                  else "dp-mixed")
+        sp.set(source=source, predicted_us=cost)
     return build_forward_plan(g, specs, configs, source=source,
                               predicted_us=cost, interpret=interpret)
 
@@ -496,12 +501,15 @@ def autotune_forward(g: Graph, specs: Sequence[LayerSpec], *,
     # schedule must never hand a layer a config its caller excluded
     cand_sig = hashlib.sha1(repr([sorted(c) for c in cand_sets])
                             .encode()).hexdigest()[:8]
-    key = (f"{graph_fingerprint(g)}:forward:{_chain_sig(specs)}:{platform}:"
-           f"{cand_sig}")
+    key = (f"{graph_fingerprint(g)}:forward:{_chain_sig(specs)}:"
+           f"{device_sig(platform)}:{cand_sig}")
     path = _cache_path(cache_dir)
     if not force:
         e = _cache_load(path).get(key)
         if e is not None:
+            obs.counter("exec.autotune.cache", result="hit").inc()
+            obs.instant("exec.forward.verdict", cat="exec",
+                        source=e["source"], us=e["us"], from_cache=True)
             configs = tuple(tuple(c) for c in e["configs"])
             scheds = tuple(
                 (lab, tuple(tuple(c) for c in cfgs))
@@ -557,13 +565,18 @@ def autotune_forward(g: Graph, specs: Sequence[LayerSpec], *,
     times: Dict[str, List[float]] = {label: [] for label in steps}
     for _ in range(max(iters, 2)):                    # interleaved
         for label, step in steps.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(step(x, params))
-            times[label].append((time.perf_counter() - t0) * 1e6)
+            with obs.span("exec.forward.race", cat="exec", schedule=label):
+                t0 = time.perf_counter()
+                jax.block_until_ready(step(x, params))
+                times[label].append((time.perf_counter() - t0) * 1e6)
     table = tuple((label, float(np.median(ts)))
                   for label, ts in times.items())
     source, us = min(table, key=lambda r: r[1])
     configs = schedules[source]
+    obs.instant("exec.forward.verdict", cat="exec", source=source, us=us,
+                from_cache=False,
+                table={lab: t for lab, t in table})
+    obs.gauge("exec.forward.best_us").set(us)
     try:
         _cache_put(path, key, {
             "configs": [list(c) for c in configs], "us": us,

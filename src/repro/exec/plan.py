@@ -43,6 +43,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..graph.structure import Graph
 from ..core.blocksparse import (BlockEll, build_blockell, transpose_graph,
                                 traffic_model)
@@ -350,19 +351,26 @@ def build_plan(g: Graph, mode: str = "gcn", *,
                         bm=bm, bk=bk, R=R, C=int(np.ceil(g.num_nodes / bk)),
                         n_active=n_active, n=g.num_nodes, interpret=interp)
 
-    if backend == "coo":
-        # the coo path never touches tiles: defer block-ELL to first access
-        fwd = _coo_arrays(g_adj, s_in, s_out, add_diag, weighted)
-        bwd = _coo_arrays(g_adj_t, s_out, s_in, add_diag, weighted)
-        ell = ell_t = None
-        meta_f, meta_b = meta_for(0), meta_for(0)
-    else:
-        ell = build_blockell(g_adj, bm=bm, bk=bk, width=width,
-                             storage=storage)
-        ell_t = build_blockell(g_adj_t, bm=bm, bk=bk, storage=storage)
-        fwd = _side_arrays(ell, s_in, s_out, backend, compact)
-        bwd = _side_arrays(ell_t, s_out, s_in, backend, compact)
-        meta_f, meta_b = meta_for(ell.n_active), meta_for(ell_t.n_active)
+    with obs.span("exec.plan.compile", cat="exec", backend=backend,
+                  mode=mode, bm=bm, compact=compact, n=g.num_nodes) as sp:
+        if backend == "coo":
+            # the coo path never touches tiles: defer block-ELL to first
+            # access
+            fwd = _coo_arrays(g_adj, s_in, s_out, add_diag, weighted)
+            bwd = _coo_arrays(g_adj_t, s_out, s_in, add_diag, weighted)
+            ell = ell_t = None
+            meta_f, meta_b = meta_for(0), meta_for(0)
+        else:
+            ell = build_blockell(g_adj, bm=bm, bk=bk, width=width,
+                                 storage=storage)
+            ell_t = build_blockell(g_adj_t, bm=bm, bk=bk, storage=storage)
+            fwd = _side_arrays(ell, s_in, s_out, backend, compact)
+            bwd = _side_arrays(ell_t, s_out, s_in, backend, compact)
+            meta_f, meta_b = meta_for(ell.n_active), meta_for(ell_t.n_active)
+            sp.set(n_active=ell.n_active,
+                   plan_bytes=int(ell.storage_bytes()
+                                  + ell_t.storage_bytes()))
+    obs.counter("exec.plan.compiles", backend=backend).inc()
     return GraphExecutionPlan(
         mode=mode, backend=backend, compact=compact, bm=bm, bk=bk,
         num_nodes=g.num_nodes, add_diag=add_diag,

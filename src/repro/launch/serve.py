@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..models import lm_init, lm_prefill, lm_decode_step
 
 
@@ -133,11 +134,13 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.02,
                     help="dataset scale for citeseer-s/reddit stand-ins")
     ap.add_argument("--no-oracle", action="store_true")
+    obs.add_cli_flags(ap)
     args = ap.parse_args(argv)
-    if args.graph is not None:
-        serve_graph(args)
-    else:
-        serve_lm(args)
+    with obs.observed_run(args.metrics_out, args.trace):
+        if args.graph is not None:
+            serve_graph(args)
+        else:
+            serve_lm(args)
 
 
 if __name__ == "__main__":

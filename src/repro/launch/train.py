@@ -14,6 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs import get
 from ..train import adam, fit, lm_token_batches, recsys_batches
 
@@ -50,6 +51,8 @@ def gnn_driver(arch: str, steps: int, ckpt: str, executor: str = "auto"):
         specs = gcn_chain(dims)
         if executor in ("auto", "forward"):
             layer_plans, rec = autotune_forward(g, specs)
+            obs.counter("exec.forward.verdict", source=rec.source).inc()
+            obs.gauge("exec.forward.verdict_us").set(rec.us)
             greedy = rec.greedy_us
             print(f"forward autotune: schedule={rec.source} "
                   f"{rec.us:.0f}us whole-chain"
@@ -134,31 +137,33 @@ def main(argv=None):
                          "cache/FLOP-byte model without measuring; "
                          "'blockell' keeps the PR 3 aggregation-only plan "
                          "+ separate matmul")
+    obs.add_cli_flags(ap)
     args = ap.parse_args(argv)
     spec = get(args.arch)
-    if args.dist:
-        if spec.family != "gnn":
-            ap.error(f"--dist supports GNN archs; {args.arch} is "
-                     f"family '{spec.family}'")
-        if args.ckpt is not None:
-            ap.error("--ckpt is not supported with --dist yet")
-        from ..dist import train_distributed
-        res = train_distributed(args.arch, steps=args.steps,
-                                parts=args.parts)
-        losses = res["losses"]
-        print(f"{args.arch} [dist]: {len(losses)} steps, loss "
-              f"{losses[0]:.4f} -> {losses[-1]:.4f}")
-        return
-    driver = {"lm": lm_reduced_driver, "gnn": gnn_driver,
-              "recsys": recsys_driver}[spec.family]
-    if spec.family == "gnn":
-        res = driver(args.arch, args.steps, args.ckpt,
-                     executor=args.executor)
-    else:
-        res = driver(args.arch, args.steps, args.ckpt)
-    print(f"{args.arch}: {res.steps} steps, loss "
-          f"{res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
-          f"{res.wall_time:.1f}s, stragglers={res.straggler_flags}")
+    with obs.observed_run(args.metrics_out, args.trace):
+        if args.dist:
+            if spec.family != "gnn":
+                ap.error(f"--dist supports GNN archs; {args.arch} is "
+                         f"family '{spec.family}'")
+            if args.ckpt is not None:
+                ap.error("--ckpt is not supported with --dist yet")
+            from ..dist import train_distributed
+            res = train_distributed(args.arch, steps=args.steps,
+                                    parts=args.parts)
+            losses = res["losses"]
+            print(f"{args.arch} [dist]: {len(losses)} steps, loss "
+                  f"{losses[0]:.4f} -> {losses[-1]:.4f}")
+            return
+        driver = {"lm": lm_reduced_driver, "gnn": gnn_driver,
+                  "recsys": recsys_driver}[spec.family]
+        if spec.family == "gnn":
+            res = driver(args.arch, args.steps, args.ckpt,
+                         executor=args.executor)
+        else:
+            res = driver(args.arch, args.steps, args.ckpt)
+        print(f"{args.arch}: {res.steps} steps, loss "
+              f"{res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
+              f"{res.wall_time:.1f}s, stragglers={res.straggler_flags}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,165 @@
+"""Export helpers: run provenance, the shared event schema, and JSONL dumps.
+
+Three record schemas (the ``schema`` field names them, ``@1`` versions them):
+
+* ``repro.obs/provenance@1`` — who/where/when: git SHA, ISO timestamp,
+  device kind, jax version, platform.  Stamped onto every metrics dump,
+  trace file, and ``BENCH_*.json`` document.
+* ``repro.obs/metric@1``     — one registry metric (counter / gauge /
+  histogram payload) as a JSON line.
+* ``repro.obs/event@1``      — a free-form named event (benchmark rows ride
+  this schema so BENCH files and ``--metrics-out`` share one vocabulary).
+
+``dump_metrics_jsonl`` writes a provenance line followed by one metric line
+per registry entry — the ``--metrics-out FILE.jsonl`` payload, validated by
+:mod:`repro.obs.validate` in CI.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import platform as _platform
+import subprocess
+from typing import Optional
+
+from . import registry as _registry
+
+SCHEMA_PROVENANCE = "repro.obs/provenance@1"
+SCHEMA_METRIC = "repro.obs/metric@1"
+SCHEMA_EVENT = "repro.obs/event@1"
+
+
+def _iso_now() -> str:
+    return datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
+
+
+def git_sha() -> str:
+    """Current commit SHA (short), or "unknown" outside a git checkout."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    for cwd in (os.getcwd(), here):
+        try:
+            out = subprocess.run(
+                ["git", "rev-parse", "--short=12", "HEAD"], cwd=cwd,
+                capture_output=True, text=True, timeout=5)
+            if out.returncode == 0 and out.stdout.strip():
+                return out.stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            pass
+    return "unknown"
+
+
+def device_kind() -> str:
+    """``jax.devices()[0].device_kind`` (e.g. "cpu", "TPU v4"), tolerant."""
+    try:
+        import jax
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
+
+
+def jax_version() -> str:
+    try:
+        import jax
+        return jax.__version__
+    except Exception:
+        return "unknown"
+
+
+def jax_backend() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "unknown"
+
+
+def provenance() -> dict:
+    """The run-identity record every exported artifact is stamped with."""
+    return {
+        "schema": SCHEMA_PROVENANCE,
+        "ts": _iso_now(),
+        "git_sha": git_sha(),
+        "device_kind": device_kind(),
+        "jax_version": jax_version(),
+        "jax_backend": jax_backend(),
+        "platform": _platform.platform(),
+    }
+
+
+def event(name: str, **fields) -> dict:
+    """One shared-schema event record (benchmark rows, verdicts, ...)."""
+    rec = {"schema": SCHEMA_EVENT, "name": name, "ts": _iso_now()}
+    rec.update(fields)
+    return rec
+
+
+def metric_records(registry: Optional[_registry.Registry] = None) -> list:
+    """Every registry metric as a ``repro.obs/metric@1`` record."""
+    reg = registry if registry is not None else _registry.REGISTRY
+    out = []
+    for m in sorted(reg.metrics(), key=_registry.full_name):
+        out.append({"schema": SCHEMA_METRIC, "type": m.kind, "name": m.name,
+                    "labels": dict(m.labels), **m.payload()})
+    return out
+
+
+def dump_metrics_jsonl(path: str,
+                       registry: Optional[_registry.Registry] = None,
+                       extra_events: Optional[list] = None) -> int:
+    """Write provenance + every metric (+ optional events) as JSON lines.
+
+    Returns the number of lines written.
+    """
+    records = [provenance()]
+    records.extend(extra_events or [])
+    records.extend(metric_records(registry))
+    with open(path, "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    return len(records)
+
+
+# --------------------------------------------------------------- CLI glue
+def add_cli_flags(ap) -> None:
+    """Attach the two observability flags every launcher shares."""
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.jsonl",
+                    help="enable telemetry and dump the metric registry "
+                         "(provenance + one JSON line per metric) on exit")
+    ap.add_argument("--trace", default=None, metavar="FILE.json",
+                    help="record a Perfetto / chrome://tracing trace of the "
+                         "run (open at https://ui.perfetto.dev)")
+
+
+class observed_run:
+    """``with observed_run(args.metrics_out, args.trace):`` — turn on what
+    the flags ask for, write the files when the block exits (even on error,
+    so a crashed run still leaves its telemetry behind)."""
+
+    def __init__(self, metrics_out: Optional[str] = None,
+                 trace_path: Optional[str] = None, log=print,
+                 extra_events: Optional[list] = None):
+        self.metrics_out = metrics_out
+        self.trace_path = trace_path
+        self.log = log
+        self.extra_events = extra_events
+
+    def __enter__(self):
+        from . import trace as _trace
+        if self.metrics_out or self.trace_path:
+            _registry.enable()
+        if self.trace_path:
+            _trace.start_trace()
+        return self
+
+    def __exit__(self, *exc):
+        from . import trace as _trace
+        if self.trace_path:
+            _trace.stop_trace(self.trace_path, other_data=provenance())
+            self.log(f"trace written to {self.trace_path}")
+        if self.metrics_out:
+            n = dump_metrics_jsonl(self.metrics_out,
+                                   extra_events=self.extra_events)
+            self.log(f"{n} metric records written to {self.metrics_out}")
+        return False

@@ -17,6 +17,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from .. import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class Request:
@@ -63,7 +65,11 @@ class MicroBatcher:
         self.pending: List[Request] = []
 
     def _flush(self, t: float, reason: str) -> MicroBatch:
+        obs.counter("serve.flush", reason=reason).inc()
+        obs.histogram("serve.flush_size", lo=1.0, hi=1e5,
+                      per_decade=20).observe(float(len(self.pending)))
         reqs, self.pending = self.pending, []
+        obs.gauge("serve.queue_depth").set(0)
         ids = np.array([r.node_id for r in reqs], dtype=np.int32)
         b = pow2_bucket(ids.shape[0], self.max_batch)
         pad = b - ids.shape[0]
@@ -76,6 +82,7 @@ class MicroBatcher:
     def submit(self, req: Request) -> Optional[MicroBatch]:
         """Add a request at its arrival time; returns a batch if now full."""
         self.pending.append(req)
+        obs.gauge("serve.queue_depth").set(len(self.pending))
         if len(self.pending) >= self.max_batch:
             return self._flush(req.t_arrival, "full")
         return None

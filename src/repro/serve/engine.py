@@ -18,6 +18,16 @@ equal the offline full-graph forward exactly, so the engine can assert an
 oracle check on every served request.  Latency bookkeeping combines the
 trace's simulated arrival/flush clock with measured compute wall-time
 (queueing backpressure between batches is not modeled).
+
+Latency state is a **streaming log-bucket histogram**
+(:class:`repro.obs.Histogram` — fixed bucket count, so memory stays bounded
+no matter how long the trace is), not a per-request list; the report's
+p50/p99 come from log-interpolated bucket quantiles with relative error
+bounded by one bucket ratio (~2.3%).  Pass ``keep_records=True`` to also
+retain the per-request :class:`RequestRecord` list for debugging.  When
+:mod:`repro.obs` is enabled the engine additionally mirrors its counters
+into the global registry and opens a span per batch stage (dedupe → embed →
+oracle) plus one per request.
 """
 from __future__ import annotations
 
@@ -27,6 +37,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from .batcher import MicroBatch, MicroBatcher, Request
 from .cache import CacheStats, EmbeddingCache
 
@@ -60,12 +71,21 @@ class ServeEngine:
 
     def __init__(self, session, cache: Optional[EmbeddingCache] = None,
                  batcher: Optional[MicroBatcher] = None,
-                 oracle_check: bool = True):
+                 oracle_check: bool = True, keep_records: bool = False):
         self.session = session
         self.cache = cache
         self.batcher = batcher or MicroBatcher()
         self.oracle_check = oracle_check
-        self.records: List[RequestRecord] = []
+        self.keep_records = keep_records
+        self.records: List[RequestRecord] = []   # only if keep_records
+        # bounded-memory latency state: a streaming histogram + running
+        # clock extrema replace the old per-request latency list; ungated —
+        # the report's percentiles must work with telemetry off (and the
+        # instance is per-engine, not in the global registry)
+        self.lat_hist = obs.Histogram("serve.latency_seconds", gated=False)
+        self.num_requests = 0
+        self._t_first = np.inf                   # earliest arrival seen
+        self._t_last = -np.inf                   # latest completion seen
         self.num_batches = 0
         self.max_oracle_err = 0.0
 
@@ -161,25 +181,43 @@ class ServeEngine:
     # -------------------------------------------------------------- serving
     def process_batch(self, mb: MicroBatch) -> np.ndarray:
         """Serve one flushed micro-batch; returns (live, d) embeddings."""
-        t0 = time.perf_counter()
-        live_ids = mb.node_ids[mb.valid]
-        unique_ids, inverse = np.unique(live_ids, return_inverse=True)
-        emb = self._embed(unique_ids)[inverse]
-        compute_dt = time.perf_counter() - t0
-        self.num_batches += 1
+        with obs.span("serve.batch", cat="serve",
+                      size=int(mb.valid.sum())) as bsp:
+            t0 = time.perf_counter()
+            with obs.span("serve.dedupe", cat="serve"):
+                live_ids = mb.node_ids[mb.valid]
+                unique_ids, inverse = np.unique(live_ids,
+                                                return_inverse=True)
+            with obs.span("serve.embed", cat="serve",
+                          unique=int(unique_ids.shape[0])):
+                emb = self._embed(unique_ids)[inverse]
+            compute_dt = time.perf_counter() - t0
+            self.num_batches += 1
 
-        errs = np.zeros(live_ids.shape[0], np.float32)
-        if self.oracle_check:
-            ref = self.session.oracle(live_ids)
-            errs = np.max(np.abs(emb - ref), axis=-1)
-            self.max_oracle_err = max(self.max_oracle_err,
-                                      float(errs.max(initial=0.0)))
-        t_done = mb.t_flush + compute_dt
-        for i, r in enumerate(mb.requests):
-            self.records.append(RequestRecord(
-                req_id=r.req_id, node_id=r.node_id,
-                latency=t_done - r.t_arrival, t_done=t_done,
-                oracle_err=float(errs[i])))
+            errs = np.zeros(live_ids.shape[0], np.float32)
+            if self.oracle_check:
+                with obs.span("serve.oracle", cat="serve"):
+                    ref = self.session.oracle(live_ids)
+                    errs = np.max(np.abs(emb - ref), axis=-1)
+                    self.max_oracle_err = max(self.max_oracle_err,
+                                              float(errs.max(initial=0.0)))
+            t_done = mb.t_flush + compute_dt
+            for i, r in enumerate(mb.requests):
+                lat = t_done - r.t_arrival
+                self.lat_hist.observe(lat)
+                self.num_requests += 1
+                self._t_first = min(self._t_first, r.t_arrival)
+                self._t_last = max(self._t_last, t_done)
+                obs.instant("serve.request", cat="serve", req_id=r.req_id,
+                            node_id=r.node_id, latency_ms=lat * 1e3)
+                if self.keep_records:
+                    self.records.append(RequestRecord(
+                        req_id=r.req_id, node_id=r.node_id,
+                        latency=lat, t_done=t_done,
+                        oracle_err=float(errs[i])))
+            obs.counter("serve.requests").inc(len(mb.requests))
+            obs.counter("serve.batches").inc()
+            bsp.set(compute_ms=compute_dt * 1e3)
         return emb
 
     def serve(self, requests: Sequence[Request]) -> ServeReport:
@@ -203,17 +241,48 @@ class ServeEngine:
         return self.report()
 
     def report(self) -> ServeReport:
-        lat = np.array([r.latency for r in self.records], np.float64)
-        if lat.size:
-            p50, p99 = np.percentile(lat, [50, 99])
-            t0 = min(r.t_done - r.latency for r in self.records)
-            t1 = max(r.t_done for r in self.records)
-            rate = lat.size / max(t1 - t0, 1e-9)
+        if self.num_requests:
+            p50 = self.lat_hist.percentile(50)
+            p99 = self.lat_hist.percentile(99)
+            rate = self.num_requests / max(self._t_last - self._t_first,
+                                           1e-9)
         else:
             p50 = p99 = rate = 0.0
+        stats = self.cache.stats() if self.cache is not None else None
+        self._export_metrics(p50, p99, rate, stats)
         return ServeReport(
-            num_requests=len(self.records), num_batches=self.num_batches,
+            num_requests=self.num_requests, num_batches=self.num_batches,
             p50_ms=float(p50) * 1e3, p99_ms=float(p99) * 1e3,
             req_per_s=float(rate),
             max_oracle_err=self.max_oracle_err,
-            cache=self.cache.stats() if self.cache is not None else None)
+            cache=stats)
+
+    def _export_metrics(self, p50: float, p99: float, rate: float,
+                        stats: Optional[CacheStats]) -> None:
+        """Mirror the report into the global registry (gated: no-ops with
+        telemetry off) — latency percentiles, throughput, and the per-layer
+        G-D / G-C cache stats re-exported as ``serve.cache.*`` gauges."""
+        if not obs.enabled():
+            return
+        obs.gauge("serve.latency_p50_ms").set(p50 * 1e3)
+        obs.gauge("serve.latency_p99_ms").set(p99 * 1e3)
+        obs.gauge("serve.req_per_s").set(rate)
+        obs.gauge("serve.max_oracle_err").set(self.max_oracle_err)
+        if stats is None:
+            return
+        obs.gauge("serve.cache.hit_rate").set(stats.hit_rate)
+        obs.gauge("serve.cache.bytes_served").set(stats.bytes_served)
+        obs.gauge("serve.cache.bytes_missed").set(stats.bytes_missed)
+        for l, d in stats.per_layer.items():
+            obs.gauge("serve.cache.hits", layer=l).set(d["hits"])
+            obs.gauge("serve.cache.misses", layer=l).set(d["misses"])
+            obs.gauge("serve.cache.evictions", layer=l).set(d["evictions"])
+            h, m = d["hits"], d["misses"]
+            obs.gauge("serve.cache.hit_rate", layer=l).set(
+                h / max(h + m, 1))
+            if "vec_bytes" in d:
+                obs.gauge("serve.cache.vec_bytes", layer=l).set(
+                    d["vec_bytes"])
+            if "miss_bytes" in d:
+                obs.gauge("serve.cache.miss_bytes", layer=l).set(
+                    d["miss_bytes"])

@@ -13,6 +13,7 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from .optimizer import Optimizer, apply_updates, clip_by_global_norm
 from .checkpoint import AsyncCheckpointer
 from .fault import StepWatchdog, resume
@@ -43,6 +44,21 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
     return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
 
+def _batch_rows(batch) -> int:
+    """Leading-dim row count of a batch (dict of arrays or one array) — the
+    numerator of the rows/sec throughput gauge; 0 when undeterminable."""
+    try:
+        if isinstance(batch, dict):
+            for v in batch.values():
+                if hasattr(v, "shape") and len(v.shape) >= 1:
+                    return int(v.shape[0])
+        elif hasattr(batch, "shape") and len(batch.shape) >= 1:
+            return int(batch.shape[0])
+    except Exception:
+        pass
+    return 0
+
+
 def fit(loss_fn: Callable, opt: Optimizer, params, batches: Iterator,
         steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
         log_every: int = 10, clip_norm: Optional[float] = 1.0,
@@ -55,17 +71,32 @@ def fit(loss_fn: Callable, opt: Optimizer, params, batches: Iterator,
     ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
     watchdog = StepWatchdog()
     losses = []
+    # metric handles held outside the loop: the disabled path per step is
+    # one attribute load + branch per call
+    step_hist = obs.histogram("train.step_seconds")
+    steps_ctr = obs.counter("train.steps")
+    loss_gauge = obs.gauge("train.loss")
+    rows_gauge = obs.gauge("train.rows_per_s")
     t0 = time.time()
     i = start
     for i, batch in zip(range(start, steps), batches):
-        ts = time.time()
-        params, opt_state, loss = step_fn(params, opt_state, batch)
-        loss = float(loss)
-        losses.append(loss)
-        slow = watchdog.observe(time.time() - ts)
+        with obs.span("train.step", cat="train", step=i) as sp:
+            ts = time.time()
+            params, opt_state, loss = step_fn(params, opt_state, batch)
+            loss = float(loss)
+            losses.append(loss)
+            dt = time.time() - ts
+            sp.set(loss=loss)
+        step_hist.observe(dt)
+        steps_ctr.inc()
+        loss_gauge.set(loss)
+        if obs.enabled():
+            rows = _batch_rows(batch)
+            if rows:
+                rows_gauge.set(rows / max(dt, 1e-9))
+        slow = watchdog.observe(dt)
         if slow:
-            log(f"[straggler] step {i} took "
-                f"{time.time() - ts:.3f}s (flagged)")
+            log(f"[straggler] step {i} took {dt:.3f}s (flagged)")
         if log_every and i % log_every == 0:
             log(f"step {i:6d}  loss {loss:.4f}")
         if ckpt and i and i % ckpt_every == 0:

@@ -78,6 +78,38 @@ def test_autotune_plan_builds_winner(tmp_path):
     assert np.asarray(plan.apply(x)).shape == (g.num_nodes, 16)
 
 
+def test_cache_keyed_by_device_kind(tmp_path, monkeypatch):
+    """Verdicts measured on one accelerator generation never serve another:
+    the key carries device_sig = backend + device_kind."""
+    import importlib
+    at = importlib.import_module("repro.exec.autotune")
+    g = _graph()
+    monkeypatch.setattr(at, "_device_kind", lambda: "TPU v4")
+    assert at.device_sig("tpu") == "tpu-TPU-v4"
+    r_v4 = autotune(g, 16, "gcn", candidates=CANDS,
+                    cache_dir=str(tmp_path), iters=1)
+    assert not r_v4.from_cache
+    assert autotune(g, 16, "gcn", candidates=CANDS,
+                    cache_dir=str(tmp_path), iters=1).from_cache
+
+    monkeypatch.setattr(at, "_device_kind", lambda: "TPU v5e")
+    r_v5 = autotune(g, 16, "gcn", candidates=CANDS,
+                    cache_dir=str(tmp_path), iters=1)
+    assert not r_v5.from_cache          # v4 verdict did not migrate
+    assert r_v4.key != r_v5.key
+
+
+def test_device_sig_collapses_when_kind_repeats_platform(monkeypatch):
+    """CPU: device_kind == backend, so the signature stays the bare platform
+    and pre-device-sig cache entries keyed ``...:cpu:...`` remain valid."""
+    import importlib
+    at = importlib.import_module("repro.exec.autotune")
+    monkeypatch.setattr(at, "_device_kind", lambda: "cpu")
+    assert at.device_sig("cpu") == "cpu"
+    monkeypatch.setattr(at, "_device_kind", lambda: "unknown")
+    assert at.device_sig("cpu") == "cpu"
+
+
 def test_default_candidates_platforms():
     cpu = default_candidates("cpu")
     tpu = default_candidates("tpu")

@@ -1,0 +1,284 @@
+"""Tests for repro.obs: registry semantics, histogram percentile accuracy,
+trace round-trips, disabled-mode no-ops, export/validate schemas, and
+integration (serve engine + train loop populate the expected metric names).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.registry import Histogram
+from repro.obs.validate import (validate_metrics_lines, validate_trace)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts with a fresh registry, telemetry off, no tracer."""
+    obs.reset()
+    obs.disable()
+    obs.stop_trace()
+    yield
+    obs.reset()
+    obs.disable()
+    obs.stop_trace()
+
+
+# ------------------------------------------------------------ counter/gauge
+def test_counter_and_gauge_semantics():
+    obs.enable()
+    c = obs.counter("t.requests", route="a")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    # same (name, labels) interns to the same object; labels distinguish
+    assert obs.counter("t.requests", route="a") is c
+    assert obs.counter("t.requests", route="b") is not c
+    g = obs.gauge("t.depth")
+    g.set(3)
+    g.set(7.5)
+    assert g.value == 7.5
+    snap = obs.snapshot()
+    assert snap["counters"]["t.requests{route=a}"] == 5
+    assert snap["gauges"]["t.depth"] == 7.5
+
+
+def test_gated_metrics_are_noops_when_disabled():
+    c = obs.counter("t.off")
+    g = obs.gauge("t.off_g")
+    h = obs.histogram("t.off_h")
+    c.inc(10)
+    g.set(5)
+    h.observe(1.0)
+    assert c.value == 0 and g.value == 0.0 and h.count == 0
+    obs.enable()
+    c.inc(10)
+    assert c.value == 10
+
+
+def test_ungated_metric_records_while_disabled():
+    h = Histogram("t.always", gated=False)
+    h.observe(0.5)
+    assert h.count == 1 and h.percentile(50) == pytest.approx(0.5, rel=0.05)
+
+
+def test_enabled_scope_restores_flag():
+    assert not obs.enabled()
+    with obs.enabled_scope():
+        assert obs.enabled()
+    assert not obs.enabled()
+
+
+# ---------------------------------------------------------------- histogram
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "exponential"])
+def test_histogram_percentiles_within_bucket_ratio(dist):
+    """p50/p90/p99 estimates vs exact quantiles: relative error bounded by
+    one bucket ratio (the documented accuracy contract)."""
+    rng = np.random.default_rng(0)
+    xs = {"lognormal": rng.lognormal(-5, 2, 20_000),
+          "uniform": rng.uniform(1e-4, 2.0, 20_000),
+          "exponential": rng.exponential(0.01, 20_000)}[dist]
+    h = Histogram("t.lat", gated=False)
+    for x in xs:
+        h.observe(float(x))
+    r = h.ratio
+    for q in (50, 90, 99):
+        exact = float(np.percentile(xs, q))
+        est = h.percentile(q)
+        assert exact / r <= est <= exact * r, (q, exact, est, r)
+
+
+def test_histogram_payload_and_extremes():
+    h = Histogram("t.h", gated=False)
+    assert h.payload()["count"] == 0 and h.percentile(50) == 0.0
+    for v in (1e-9, 1.0, 1e6):          # underflow, in-range, overflow
+        h.observe(v)
+    p = h.payload()
+    assert p["count"] == 3
+    assert p["min"] == 1e-9 and p["max"] == 1e6
+    assert p["sum"] == pytest.approx(1e-9 + 1.0 + 1e6)
+    # estimates stay clamped to the observed range
+    assert 1e-9 <= h.percentile(1) <= 1e6
+    assert 1e-9 <= h.percentile(99) <= 1e6
+
+
+def test_histogram_memory_is_bounded():
+    h = Histogram("t.h", gated=False)
+    nb = len(h.buckets)
+    for v in np.random.default_rng(1).exponential(0.01, 5000):
+        h.observe(float(v))
+    assert len(h.buckets) == nb          # fixed bucket list, no growth
+
+
+# --------------------------------------------------------------- prometheus
+def test_prometheus_exposition():
+    obs.enable()
+    obs.counter("t.reqs", route="x").inc(3)
+    obs.gauge("t.depth").set(2)
+    obs.histogram("t.lat").observe(0.1)
+    text = obs.to_prometheus()
+    assert '# TYPE t_reqs counter' in text
+    assert 't_reqs{route="x"} 3' in text
+    assert '# TYPE t_depth gauge' in text
+    assert '# TYPE t_lat summary' in text
+    assert 't_lat_count 1' in text
+    assert 't_lat{quantile="0.5"}' in text
+
+
+# -------------------------------------------------------------------- trace
+def test_trace_round_trip_valid_perfetto(tmp_path):
+    obs.start_trace()
+    with obs.span("outer", cat="test", k=1) as sp:
+        sp.set(verdict="ok")
+        with obs.span("inner", cat="test"):
+            pass
+    obs.instant("mark", cat="test", n=3)
+    path = str(tmp_path / "trace.json")
+    doc = obs.stop_trace(path, other_data={"run": "t"})
+    assert validate_trace(doc) == []
+    on_disk = json.load(open(path))
+    assert validate_trace(on_disk) == []
+    names = [e["name"] for e in on_disk["traceEvents"]]
+    assert {"outer", "inner", "mark", "process_name"} <= set(names)
+    outer = next(e for e in on_disk["traceEvents"] if e["name"] == "outer")
+    assert outer["ph"] == "X" and outer["dur"] >= 0
+    assert outer["args"]["verdict"] == "ok" and outer["args"]["k"] == 1
+    # inner nests inside outer on the shared timeline
+    inner = next(e for e in on_disk["traceEvents"] if e["name"] == "inner")
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    assert on_disk["otherData"] == {"run": "t"}
+
+
+def test_span_is_shared_noop_without_tracer():
+    assert not obs.tracing()
+    s1, s2 = obs.span("a", x=1), obs.span("b")
+    assert s1 is s2 is obs.NOOP_SPAN     # no allocation when idle
+    with s1 as s:
+        s.set(anything=1)                # all no-ops
+    obs.instant("nothing")               # doesn't raise
+
+
+def test_validate_trace_rejects_malformed():
+    assert validate_trace({"notTraceEvents": []}) != []
+    assert validate_trace({"traceEvents": [{"name": "x"}]}) != []       # no ph
+    assert validate_trace(
+        {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0,
+                          "pid": 1, "tid": 0}]}) != []                  # no dur
+
+
+# ------------------------------------------------------------------- export
+def test_metrics_jsonl_round_trip(tmp_path):
+    obs.enable()
+    obs.counter("t.reqs").inc(2)
+    obs.histogram("t.lat").observe(0.25)
+    path = str(tmp_path / "m.jsonl")
+    n = obs.dump_metrics_jsonl(path, extra_events=[obs.event("custom", k=1)])
+    lines = open(path).read().splitlines()
+    assert len(lines) == n == 4          # provenance + event + 2 metrics
+    assert validate_metrics_lines(lines) == []
+    head = json.loads(lines[0])
+    assert head["schema"] == obs.SCHEMA_PROVENANCE
+    for k in ("ts", "git_sha", "device_kind", "jax_version"):
+        assert head[k]
+    recs = [json.loads(l) for l in lines[1:]]
+    by_name = {r["name"]: r for r in recs}
+    assert by_name["custom"]["schema"] == obs.SCHEMA_EVENT
+    assert by_name["t.reqs"]["type"] == "counter"
+    assert by_name["t.reqs"]["value"] == 2
+    assert by_name["t.lat"]["type"] == "histogram"
+    assert by_name["t.lat"]["count"] == 1
+
+
+def test_validate_metrics_rejects_missing_provenance():
+    bad = [json.dumps({"schema": obs.SCHEMA_METRIC, "type": "counter",
+                       "name": "x", "value": 1})]
+    assert validate_metrics_lines(bad) != []
+
+
+# -------------------------------------------------------------- integration
+def test_serve_engine_populates_metrics(community_graph):
+    from repro.core import minhash_reorder
+    from repro.serve import (EmbeddingCache, MicroBatcher, ServeEngine,
+                             make_session, zipfian_trace)
+    obs.enable()
+    g = community_graph
+    sess = make_session("gcn", g, hidden=16, out_dim=8, seed=0)
+    cache = EmbeddingCache(sess.layer_dims, capacity_bytes=200_000,
+                           order=minhash_reorder(g), line_size=16)
+    eng = ServeEngine(sess, cache, MicroBatcher(max_batch=8, max_wait=1e-3),
+                      oracle_check=False)
+    rep = eng.serve(zipfian_trace(g.num_nodes, 60, a=1.2, seed=1))
+    snap = obs.snapshot()
+    assert snap["counters"]["serve.requests"] == 60
+    assert snap["counters"]["serve.batches"] == rep.num_batches
+    assert sum(v for k, v in snap["counters"].items()
+               if k.startswith("serve.flush{")) == rep.num_batches
+    assert "serve.queue_depth" in snap["gauges"]
+    assert snap["gauges"]["serve.cache.hit_rate"] == pytest.approx(
+        rep.hit_rate)
+    assert snap["gauges"]["serve.latency_p50_ms"] == pytest.approx(
+        rep.p50_ms)
+    assert snap["gauges"]["serve.latency_p99_ms"] == pytest.approx(
+        rep.p99_ms)
+    per_layer = [k for k in snap["gauges"] if
+                 k.startswith("serve.cache.miss_bytes{layer=")]
+    assert len(per_layer) == len(sess.layer_dims)
+
+
+def test_serve_report_works_with_obs_disabled(community_graph):
+    """The report's percentiles ride an UNGATED histogram: correctness
+    does not depend on the telemetry flag."""
+    from repro.serve import (MicroBatcher, ServeEngine, make_session,
+                             zipfian_trace)
+    assert not obs.enabled()
+    sess = make_session("gcn", community_graph, hidden=16, out_dim=8, seed=0)
+    eng = ServeEngine(sess, cache=None,
+                      batcher=MicroBatcher(max_batch=4, max_wait=1e-3),
+                      oracle_check=False)
+    rep = eng.serve(zipfian_trace(community_graph.num_nodes, 40, seed=2))
+    assert rep.num_requests == 40
+    assert rep.p99_ms >= rep.p50_ms > 0
+    assert rep.req_per_s > 0
+    # and nothing recorded into the gated global registry (interned metric
+    # objects stay at zero while the flag is off)
+    assert obs.snapshot()["counters"].get("serve.requests", 0) == 0
+
+
+def test_serve_latency_memory_is_bounded(community_graph):
+    from repro.serve import (MicroBatcher, ServeEngine, make_session,
+                             zipfian_trace)
+    sess = make_session("gcn", community_graph, hidden=16, out_dim=8, seed=0)
+    eng = ServeEngine(sess, cache=None,
+                      batcher=MicroBatcher(max_batch=8, max_wait=1e-3),
+                      oracle_check=False)
+    eng.serve(zipfian_trace(community_graph.num_nodes, 50, seed=3))
+    assert eng.records == []             # keep_records=False by default
+    assert eng.num_requests == 50
+    assert eng.lat_hist.count == 50
+
+
+def test_train_loop_populates_metrics():
+    import jax.numpy as jnp
+    from repro.train import adam, fit
+    obs.enable()
+    obs.start_trace()
+    params = {"w": jnp.zeros((4,))}
+    batch = {"x": jnp.ones((8, 4)), "y": jnp.zeros((8,))}
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    res = fit(loss_fn, adam(1e-2), params, iter(lambda: batch, None),
+              steps=2, log_every=0, log=lambda *a, **k: None)
+    assert res.steps == 2
+    snap = obs.snapshot()
+    assert snap["counters"]["train.steps"] == 2
+    assert snap["histograms"]["train.step_seconds"]["count"] == 2
+    assert "train.loss" in snap["gauges"]
+    assert snap["gauges"]["train.rows_per_s"] > 0
+    doc = obs.stop_trace()
+    steps = [e for e in doc["traceEvents"] if e["name"] == "train.step"]
+    assert len(steps) == 2
+    assert all("loss" in e["args"] for e in steps)
+    assert validate_trace(doc) == []
