@@ -78,9 +78,11 @@ def _plan_step(plan):
 
 
 def _time_interleaved(fns, args, iters: int):
-    """Median us per fn over shared ``args``, calls interleaved round-robin
-    so every contender sees the same background load (these graphs are
-    CPU-sized and a drifting machine would otherwise decide the verdict)."""
+    """``(medians, samples)`` us per fn over shared ``args``, calls
+    interleaved round-robin so every contender sees the same background load
+    (these graphs are CPU-sized and a drifting machine would otherwise
+    decide the verdict).  The raw per-rep samples ride each emitted row so
+    :mod:`repro.obs.regress` can bootstrap noise-aware CIs across runs."""
     import time as _t
     for f in fns:
         jax.block_until_ready(f(*args))
@@ -91,7 +93,7 @@ def _time_interleaved(fns, args, iters: int):
             t0 = _t.perf_counter()
             jax.block_until_ready(f(*args))
             ts[i].append((_t.perf_counter() - t0) * 1e6)
-    return [float(np.median(t)) for t in ts]
+    return [float(np.median(t)) for t in ts], ts
 
 
 def _bench_graph(name: str, g, d: int, quick: bool, cache_dir: str) -> None:
@@ -107,16 +109,17 @@ def _bench_graph(name: str, g, d: int, quick: bool, cache_dir: str) -> None:
     plan, rec = autotune_plan(g, d, "gcn", candidates=candidates,
                               cache_dir=cache_dir, iters=max(iters // 3, 2))
     plan_step = _plan_step(plan)
-    us_seg, us_plan = _time_interleaved([seg_step, plan_step], (x,), iters)
+    (us_seg, us_plan), (s_seg, s_plan) = _time_interleaved(
+        [seg_step, plan_step], (x,), iters)
     emit(f"exec/segment_fwd_bwd_{name}", us_seg, "gather+segsum baseline",
-         graph=name, d=d)
+         graph=name, d=d, samples=s_seg)
     info = plan.describe(d)
     emit(f"exec/plan_autotuned_fwd_bwd_{name}", us_plan,
          f"{rec.backend} bm={rec.bm} compact={rec.compact} "
          f"speedup_vs_segment={us_seg / max(us_plan, 1e-9):.2f}x",
          graph=name, d=d, backend=rec.backend, bm=rec.bm,
          compact=rec.compact, speedup_vs_segment=us_seg / max(us_plan, 1e-9),
-         autotune_table=[list(r) for r in rec.table])
+         autotune_table=[list(r) for r in rec.table], samples=s_plan)
 
     # parity: the plan must reproduce the segment chain
     err = float(jnp.abs(plan.apply(x) - seg_fwd(x)).max())
@@ -126,15 +129,18 @@ def _bench_graph(name: str, g, d: int, quick: bool, cache_dir: str) -> None:
     bm = 64 if quick else 128
     padded = build_plan(g, "gcn", bm=bm, backend="jnp", compact=False)
     compacted = build_plan(g, "gcn", bm=bm, backend="jnp", compact=True)
-    us_pad = time_fn(_plan_step(padded), x, iters=3)     # order-of-magnitude
-    us_cmp = time_fn(_plan_step(compacted), x, iters=3)  # rows on CPU
+    us_pad, s_pad = time_fn(_plan_step(padded), x, iters=3,
+                            return_samples=True)         # order-of-magnitude
+    us_cmp, s_cmp = time_fn(_plan_step(compacted), x, iters=3,
+                            return_samples=True)         # rows on CPU
     emit(f"exec/blockell_padded_fwd_bwd_{name}", us_pad,
-         f"grid={padded.grid_size}", grid=padded.grid_size, bm=bm)
+         f"grid={padded.grid_size}", grid=padded.grid_size, bm=bm,
+         samples=s_pad)
     emit(f"exec/blockell_compacted_fwd_bwd_{name}", us_cmp,
          f"grid={compacted.grid_size} "
          f"({compacted.grid_size / max(padded.grid_size, 1):.2f}x of padded)",
          grid=compacted.grid_size, bm=bm,
-         speedup_vs_padded=us_pad / max(us_cmp, 1e-9))
+         speedup_vs_padded=us_pad / max(us_cmp, 1e-9), samples=s_cmp)
     emit(f"exec/plan_bytes_{name}", 0.0,
          f"implicit={info['implicit_weights']} "
          f"storage={info['plan_bytes']}B "
@@ -209,11 +215,11 @@ def _bench_layer(name: str, g, shapes, quick: bool, cache_dir: str) -> None:
         fused_step = _layer_step(
             lambda x, w, b: lp.apply(x, w, b, relu=True))
 
-        us_base, us_fused = _time_interleaved(
+        (us_base, us_fused), (s_base, s_fused) = _time_interleaved(
             [base_step, fused_step], (x, w, b), iters)
         emit(f"exec/layer_pr3_fwd_bwd_{name}_{shape}", us_base,
              f"{gplan.backend} aggregate + separate matmul",
-             graph=name, d_in=d_in, d_out=d_out)
+             graph=name, d_in=d_in, d_out=d_out, samples=s_base)
         model_order = choose_order(g.num_nodes, g.num_valid_edges,
                                    d_in, d_out)
         emit(f"exec/layer_fused_fwd_bwd_{name}_{shape}", us_fused,
@@ -225,7 +231,7 @@ def _bench_layer(name: str, g, shapes, quick: bool, cache_dir: str) -> None:
              compact=rec.compact, model_order=model_order,
              order_agrees_with_model=rec.order == model_order,
              speedup_vs_pr3=us_base / max(us_fused, 1e-9),
-             autotune_table=[list(r) for r in rec.table])
+             autotune_table=[list(r) for r in rec.table], samples=s_fused)
 
         # parity: the fused layer must reproduce the PR 3 chain
         err = float(jnp.abs(lp.apply(x, w, b, relu=True)
@@ -304,17 +310,19 @@ def _bench_forward(name: str, g, dims, quick: bool, cache_dir: str) -> None:
     if tuple(fplan.configs) == tuple(greedy_cfgs):
         # the DP kept the per-layer schedule: same compiled callable, so the
         # comparison is exactly 1.0x by construction
-        us_dp = us_greedy = _time_interleaved([dp_step], (x,), iters)[0]
+        (meds, samps) = _time_interleaved([dp_step], (x,), iters)
+        us_dp = us_greedy = meds[0]
+        s_dp = s_greedy = samps[0]
     else:
         gplan_fwd = build_forward_plan(g, specs, greedy_cfgs,
                                        source="greedy")
         greedy_step = _chain_step(gplan_fwd, params)
-        us_greedy, us_dp = _time_interleaved([greedy_step, dp_step], (x,),
-                                             iters)
+        (us_greedy, us_dp), (s_greedy, s_dp) = _time_interleaved(
+            [greedy_step, dp_step], (x,), iters)
     emit(f"exec/forward_pr4_fwd_bwd_{name}_{chain}", us_greedy,
          "per-layer-tuned layer plans chained (PR 4 baseline)",
          graph=name, dims=list(dims),
-         configs=[list(c) for c in greedy_cfgs])
+         configs=[list(c) for c in greedy_cfgs], samples=s_greedy)
     emit(f"exec/forward_dp_fwd_bwd_{name}_{chain}", us_dp,
          f"schedule={rec.source} "
          f"speedup_vs_pr4={us_greedy / max(us_dp, 1e-9):.2f}x "
@@ -324,7 +332,7 @@ def _bench_forward(name: str, g, dims, quick: bool, cache_dir: str) -> None:
          num_gplans=fplan.num_gplans,
          speedup_vs_pr4=us_greedy / max(us_dp, 1e-9),
          same_schedule=tuple(fplan.configs) == tuple(greedy_cfgs),
-         autotune_table=[list(r) for r in rec.table])
+         autotune_table=[list(r) for r in rec.table], samples=s_dp)
 
     # parity: the scheduled chain must reproduce the unfused reference chain
     ref_plan = build_plan(g, "gcn", backend="coo")

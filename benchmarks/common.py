@@ -47,8 +47,13 @@ def dataset(name: str):
     return synthesize(BENCH_DATASETS[name])
 
 
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall-clock microseconds per call."""
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            return_samples: bool = False):
+    """Median wall-clock microseconds per call.
+
+    ``return_samples=True`` returns ``(median, [raw samples...])`` so the
+    row can carry its noise information into :mod:`repro.obs.regress`
+    (bootstrap CIs need the per-rep timings, not just the median)."""
     for _ in range(warmup):
         fn(*args)
     ts = []
@@ -57,7 +62,8 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
         out = fn(*args)
         _block(out)
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    med = float(np.median(ts))
+    return (med, ts) if return_samples else med
 
 
 def _block(out):
@@ -79,14 +85,16 @@ def emit(name: str, us: float, derived: str = "", **extra) -> None:
     RESULTS.append(rec)
 
 
-def dump_results(path: str) -> None:
+def dump_results(path: str) -> dict:
     """Write everything emitted so far as one JSON document.
 
     Results are ``repro.obs/event@1`` records under a
     ``repro.obs/provenance@1`` header; the legacy top-level keys
     (``timestamp``/``platform``/``jax_backend``) and per-result fields
     (``name``/``us_per_call``/``derived``) are preserved, so pre-existing
-    consumers keep working while new ones get git SHA + device kind."""
+    consumers keep working while new ones get git SHA + device kind.
+    Returns the document so ``run.py`` can append its trajectory row
+    (:func:`repro.obs.regress.append_trajectory`) without re-reading."""
     prov = obs.provenance()
     doc = {
         "provenance": prov,
@@ -101,3 +109,4 @@ def dump_results(path: str) -> None:
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"# wrote {len(RESULTS)} results to {path}")
+    return doc

@@ -12,9 +12,16 @@ then LOWERED ON THE PRODUCTION MESH with those static capacities and its
 collective bytes parsed from the compiled HLO.
 
   PYTHONPATH=src:. python -m benchmarks.hillclimb_gcn_halo
+
+Standalone, the module forces a 512-device host platform so the production
+mesh exists; under ``benchmarks/run.py`` jax is usually already initialized
+with fewer devices, in which case the mesh stage emits a skip row (the cut
+fraction measurement still runs — it needs no mesh).
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import time
 
 import numpy as np
 import jax
@@ -26,6 +33,7 @@ from repro.core import minhash_reorder
 from repro.dist import build_send_plan
 from repro.roofline.hlo import collective_bytes
 from repro.roofline import hw
+from .common import emit
 
 
 def measured_cut_fractions(parts: int = 256, scale: float = 0.01):
@@ -90,24 +98,44 @@ def lower_halo_step(n_nodes: int, d: int, parts: int, halo_frac: float,
             "halo_capacity": H, "pair_capacity": K}
 
 
-def main():
-    from repro.launch.mesh import make_production_mesh
+def main(quick: bool = False) -> None:
     # measure at parts=8 on the 1% twin: window/community size RATIO then
     # matches 256 parts on the full 2.4M-node graph (windows ~3k nodes vs
     # communities ~0.3-3k in both cases)
-    fracs, _ = measured_cut_fractions(parts=8, scale=0.01)
-    print("measured cut fractions (products twin, scale-matched):")
+    t0 = time.perf_counter()
+    fracs, _ = measured_cut_fractions(parts=8, scale=0.005 if quick
+                                      else 0.01)
+    us_meas = (time.perf_counter() - t0) * 1e6
     for tag, f in fracs.items():
-        print(f"  {tag}: cut={f['cut_fraction']:.3f} "
-              f"halo_rows/local={f['halo_rows_over_local_nodes']:.3f}")
+        emit(f"hillclimb/halo_cut_fraction_{tag}", us_meas,
+             f"cut={f['cut_fraction']:.3f} "
+             f"halo_rows/local={f['halo_rows_over_local_nodes']:.3f}",
+             cut_fraction=f["cut_fraction"],
+             halo_rows_over_local_nodes=f["halo_rows_over_local_nodes"])
+
+    if jax.device_count() < 256:
+        emit("hillclimb/halo_mesh_lowering_skipped", 0.0,
+             f"needs a 256-chip mesh, have {jax.device_count()} device(s) "
+             "(standalone run forces XLA_FLAGS host-device count)",
+             skipped=True, devices=jax.device_count())
+        return
+    from repro.launch.mesh import make_production_mesh
     mesh = make_production_mesh(multi_pod=False)
     N, d = 2_449_408, 100
     for tag in ("index", "reordered"):
         hf = fracs[tag]["halo_rows_over_local_nodes"]
+        t0 = time.perf_counter()
         r = lower_halo_step(N, d, 256, hf, mesh)
-        print(f"halo step ({tag}): coll={r['coll_bytes_per_chip']/1e6:.1f}MB"
-              f"/chip  t_coll={r['t_collective']*1e3:.2f}ms "
-              f"(baseline GSPMD cell: 51.7ms)")
+        us_lower = (time.perf_counter() - t0) * 1e6
+        emit(f"hillclimb/halo_step_{tag}", us_lower,
+             f"coll={r['coll_bytes_per_chip'] / 1e6:.1f}MB/chip "
+             f"t_coll={r['t_collective'] * 1e3:.2f}ms "
+             "(baseline GSPMD cell: 51.7ms)",
+             coll_bytes_per_chip=r["coll_bytes_per_chip"],
+             t_collective_ms=r["t_collective"] * 1e3,
+             baseline_gspmd_ms=51.7,
+             halo_capacity=r["halo_capacity"],
+             pair_capacity=r["pair_capacity"])
 
 
 if __name__ == "__main__":

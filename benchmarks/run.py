@@ -5,16 +5,30 @@ Prints ``name,us_per_call,derived`` CSV rows.
 substring (e.g. ``--only serve`` or ``--only fig9``), so a single figure or
 bench can be iterated on without paying for the whole suite.
 
+``--quick`` asks each module that supports it (``main(quick=True)``) for a
+reduced sweep — the CI perf-sentinel mode; modules without the parameter
+run as usual.
+
 ``--json PATH`` additionally dumps every emitted row (with any structured
 extras the bench attached) as one machine-readable document — the repo's
 ``BENCH_*.json`` trajectory comes from committing these.  The document is
 stamped with ``repro.obs`` provenance (git SHA, ISO timestamp, device kind,
 jax version) and each row rides the ``repro.obs/event@1`` schema, so BENCH
-files and ``--metrics-out`` dumps share one vocabulary.
+files and ``--metrics-out`` dumps share one vocabulary.  Every ``--json``
+run also appends one summary row to ``BENCH_trajectory.jsonl`` next to the
+output (override with ``--trajectory PATH``, disable with
+``--trajectory ''``) — the long-term record ``repro.obs.regress`` gates
+against.
+
+``--metrics-out FILE.jsonl`` / ``--trace FILE.json`` enable telemetry for
+the whole run, same flags as both launchers; the trace's
+``exec.autotune.trial`` spans feed ``python -m repro.obs.audit``.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import os
 import sys
 import time
 import traceback
@@ -28,15 +42,38 @@ MODULES = [
     "benchmarks.bench_exec",
     "benchmarks.bench_halo",
     "benchmarks.bench_serve",
+    "benchmarks.hillclimb_gcn_halo",
 ]
 
 
+def _call_main(mod, quick: bool) -> None:
+    """``mod.main(quick=...)`` when the module supports it, else bare."""
+    try:
+        params = inspect.signature(mod.main).parameters
+    except (TypeError, ValueError):
+        params = {}
+    if "quick" in params:
+        mod.main(quick=quick)
+    else:
+        mod.main()
+
+
 def main(argv=None) -> None:
+    from repro import obs
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, metavar="SUBSTRING",
                     help="run only modules whose name contains SUBSTRING")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps on modules that support it "
+                         "(CI perf-sentinel mode)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all emitted results to PATH as JSON")
+    ap.add_argument("--trajectory", default=None, metavar="PATH",
+                    help="trajectory JSONL to append the --json run to "
+                         "(default: BENCH_trajectory.jsonl next to the "
+                         "--json output; '' disables)")
+    obs.add_cli_flags(ap)
     args = ap.parse_args(argv)
     selected = [m for m in MODULES
                 if args.only is None or args.only in m]
@@ -45,19 +82,31 @@ def main(argv=None) -> None:
                  + ", ".join(m.rsplit('.', 1)[1] for m in MODULES))
     print("name,us_per_call,derived")
     failures = 0
-    for mod_name in selected:
-        t0 = time.time()
-        try:
-            mod = __import__(mod_name, fromlist=["main"])
-            mod.main()
-            print(f"# {mod_name} done in {time.time() - t0:.1f}s")
-        except Exception:
-            failures += 1
-            print(f"# {mod_name} FAILED")
-            traceback.print_exc()
+    with obs.observed_run(args.metrics_out, args.trace,
+                          log=lambda m: print(f"# {m}")):
+        for mod_name in selected:
+            t0 = time.time()
+            try:
+                mod = __import__(mod_name, fromlist=["main"])
+                _call_main(mod, args.quick)
+                print(f"# {mod_name} done in {time.time() - t0:.1f}s")
+            except Exception:
+                failures += 1
+                print(f"# {mod_name} FAILED")
+                traceback.print_exc()
     if args.json:
         from benchmarks.common import dump_results
-        dump_results(args.json)
+        doc = dump_results(args.json)
+        traj = args.trajectory
+        if traj is None:
+            traj = os.path.join(
+                os.path.dirname(os.path.abspath(args.json)),
+                "BENCH_trajectory.jsonl")
+        if traj:
+            from repro.obs.regress import append_trajectory
+            row = append_trajectory(doc, traj, args.json)
+            print(f"# trajectory row ({row['n_rows']} rows) appended "
+                  f"to {traj}")
     if failures:
         sys.exit(1)
 

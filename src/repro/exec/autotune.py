@@ -53,11 +53,37 @@ from .. import obs
 from ..core.blocksparse import traffic_model
 from ..graph.structure import Graph
 from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
-                   build_layer_plan, choose_order)
+                   build_layer_plan, choose_order, layer_order_costs,
+                   spmm_cost)
 
 Candidate = Tuple[str, int, bool]   # (backend, bm==bk, compact)
 # (order, fuse, backend, bm==bk, compact) — the joint layer space
 LayerCandidate = Tuple[str, bool, str, int, bool]
+
+_BYTES_PER_EL = 4
+
+
+# ------------------------------------------------- cold cost model (shared)
+def model_graph_cost(n: int, e: int, d: int) -> float:
+    """Cold-model cost (byte-equivalents) of one aggregation-only launch —
+    the modeled counterpart every graph-plan trial is audited against."""
+    return spmm_cost(n, e, d)
+
+
+def model_layer_cost_dims(n: int, e: int, d_in: int, d_out: int,
+                          cand: LayerCandidate) -> float:
+    """Cold-model cost (byte-equivalents) of one (layer, candidate), from
+    plain dimensions.  Extends :func:`repro.exec.plan.layer_order_costs`
+    with the fusion credit: the one-launch epilogue keeps the ``(n, d_in)``
+    aggregation in VMEM instead of round-tripping it through HBM.  The self
+    half's matmul is candidate-independent, so it never moves the argmin and
+    is left out.  (:func:`repro.exec.forward.model_layer_cost` is the
+    LayerSpec-shaped wrapper.)"""
+    order, fuse = cand[0], cand[1]
+    cost = layer_order_costs(n, e, d_in, d_out)[order]
+    if fuse:
+        cost -= 2.0 * n * d_in * _BYTES_PER_EL
+    return cost
 
 
 def default_candidates(platform: Optional[str] = None) -> List[Candidate]:
@@ -273,11 +299,14 @@ def autotune(g: Graph, d: int, mode: str = "gcn", *,
 
     x = jnp.asarray(np.random.default_rng(seed)
                     .standard_normal((g.num_nodes, d)).astype(np.float32))
+    n_nodes, n_edges = g.num_nodes, g.num_valid_edges
+    model_cost = model_graph_cost(n_nodes, n_edges, d)
     table: List[Tuple[str, int, bool, float]] = []
     best: Optional[Tuple[float, Candidate]] = None
     for backend, bm, compact in cands:
         with obs.span("exec.autotune.trial", cat="exec", backend=backend,
-                      bm=bm, compact=compact, d=d, mode=mode) as sp:
+                      bm=bm, compact=compact, d=d, mode=mode, n=n_nodes,
+                      e=n_edges, model_cost=model_cost) as sp:
             try:
                 plan = build_plan(g, mode, bm=bm, bk=bm, backend=backend,
                                   compact=compact)
@@ -295,8 +324,13 @@ def autotune(g: Graph, d: int, mode: str = "gcn", *,
                            f"(tried {cands})")
     us, (backend, bm, compact) = best
     try:
+        # geometry + device_sig ride along so repro.obs.audit can re-model
+        # every table row offline and key the calibration per device
         _cache_put(path, key, {"backend": backend, "bm": bm,
-                               "compact": compact, "us": us, "table": table})
+                               "compact": compact, "us": us, "table": table,
+                               "n": n_nodes, "e": n_edges, "d": d,
+                               "mode": mode,
+                               "device_sig": device_sig(platform)})
     except OSError:
         pass                  # read-only FS: tuning still works, just uncached
     return AutotuneRecord(key=key, backend=backend, bm=bm, compact=compact,
@@ -434,12 +468,17 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
         if bias else None
     gplans: Dict[Tuple[str, int, bool], GraphExecutionPlan] = (
         {} if _gplan_cache is None else _gplan_cache)
+    n_nodes, n_edges = g.num_nodes, g.num_valid_edges
     table: List[Tuple[str, bool, str, int, bool, float]] = []
     best = None
     for order, fuse, backend, bm, compact in cands:
+        cand = (order, fuse, backend, bm, compact)
         with obs.span("exec.autotune.trial", cat="exec", backend=backend,
                       bm=bm, compact=compact, order=order, fuse=fuse,
-                      d_in=d_in, d_out=d_out, mode=mode) as sp:
+                      d_in=d_in, d_out=d_out, mode=mode, n=n_nodes,
+                      e=n_edges,
+                      model_cost=model_layer_cost_dims(
+                          n_nodes, n_edges, d_in, d_out, cand)) as sp:
             try:
                 gkey = (backend, bm, compact)
                 if gkey not in gplans:
@@ -472,10 +511,14 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
             if alt[-1] <= us * 1.10:
                 order, fuse, backend, bm, compact, us = alt
     try:
+        # geometry + device_sig ride along for repro.obs.audit (see above)
         _cache_put(path, key, {"order": order, "fuse": fuse,
                                "backend": backend, "bm": bm,
                                "compact": compact, "us": us,
-                               "model_order": model_order, "table": table})
+                               "model_order": model_order, "table": table,
+                               "n": n_nodes, "e": n_edges, "d_in": d_in,
+                               "d_out": d_out, "mode": mode,
+                               "device_sig": device_sig(platform)})
     except OSError:
         pass                  # read-only FS: tuning still works, just uncached
     return LayerAutotuneRecord(key=key, order=order, fuse=fuse,

@@ -55,8 +55,9 @@ from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
                    build_layer_plan, layer_order_costs)
 from .autotune import (LayerCandidate, autotune_layer, cached_layer_costs,
                        default_layer_candidates, device_sig,
-                       graph_fingerprint,
+                       graph_fingerprint, model_layer_cost_dims,
                        _cache_path, _cache_load, _cache_put)
+from ..obs.audit import cand_class, class_ratios, load_calibration
 
 SELF_KINDS = ("none", "two_w", "self_coeff")
 
@@ -158,11 +159,7 @@ def model_layer_cost(n: int, e: int, spec: LayerSpec,
     epilogue keeps the ``(n, d_in)`` aggregation in VMEM instead of
     round-tripping it through HBM.  The self half's matmul is
     candidate-independent, so it never moves the argmin and is left out."""
-    order, fuse, _backend, _bm, _compact = cand
-    cost = layer_order_costs(n, e, spec.d_in, spec.d_out)[order]
-    if fuse:
-        cost -= 2.0 * n * spec.d_in * _BYTES_PER_EL
-    return cost
+    return model_layer_cost_dims(n, e, spec.d_in, spec.d_out, cand)
 
 
 def residual_edge_cost(n: int, d_boundary: int,
@@ -192,10 +189,15 @@ class ForwardCostOracle:
     """Per-(layer, candidate) node costs and per-boundary edge costs.
 
     ``node_us[l][cand]`` is measured microseconds when the autotune cache
-    holds the candidate, otherwise the FLOP/byte model rescaled by the median
-    measured/model ratio (so warm and cold layers share one unit).  With no
-    measurements at all, costs stay in model units — still consistent across
-    candidates, which is all the argmin needs."""
+    holds the candidate, otherwise the FLOP/byte model rescaled into
+    microseconds.  The rescale prefers the audited per-class calibration
+    ratio for the candidate's ``(backend, bm, compact, order)`` class
+    (``class_scale``, from :mod:`repro.obs.audit`) and falls back to the
+    single median measured/model ratio ``scale`` for unaudited classes —
+    so warm and cold layers share one unit, and systematic per-backend
+    model error no longer leaks into cold verdicts.  With no measurements
+    at all, costs stay in model units — still consistent across candidates,
+    which is all the argmin needs."""
 
     n: int
     e: int
@@ -204,13 +206,15 @@ class ForwardCostOracle:
     measured: Tuple[Dict[LayerCandidate, float], ...]
     scale: float
     sources: Tuple[str, ...]          # per layer: "measured" | "model"
+    class_scale: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def node_cost(self, layer: int, cand: LayerCandidate) -> float:
         us = self.measured[layer].get(cand)
         if us is not None:
             return us
+        scale = self.class_scale.get(cand_class(cand), self.scale)
         return model_layer_cost(self.n, self.e, self.specs[layer],
-                                cand) * self.scale
+                                cand) * scale
 
     def edge_cost(self, layer: int, prev: LayerCandidate,
                   cand: LayerCandidate) -> float:
@@ -232,11 +236,17 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
                       = None,
                       cache_dir: Optional[str] = None,
                       platform: Optional[str] = None,
-                      use_cache: bool = True) -> ForwardCostOracle:
+                      use_cache: bool = True,
+                      calibration: Optional[dict] = None,
+                      use_calibration: bool = True) -> ForwardCostOracle:
     """Assemble the DP's cost oracle for ``specs`` over ``g``.
 
-    ``use_cache=False`` forces the pure cold model (the ``dp-model``
-    schedule ``autotune_forward`` races against the warm one)."""
+    ``use_cache=False`` forces the cold model (the ``dp-model`` schedule
+    ``autotune_forward`` races against the warm one).  Cold candidates are
+    rescaled with this device's audited calibration table when one exists
+    (``python -m repro.obs.audit``; pass ``calibration`` explicitly to
+    override, ``use_calibration=False`` for the uncalibrated PR 5
+    behavior)."""
     platform = platform or jax.default_backend()
     specs = tuple(specs)
     if candidates is None:
@@ -264,12 +274,20 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
             model = model_layer_cost(n, e, s, cand)
             if model > 0:
                 ratios.append(us / model)
-    scale = float(np.median(ratios)) if ratios else 1.0
+    if calibration is None and use_calibration:
+        calibration = load_calibration(device_sig(platform), cache_dir)
+    class_scale = class_ratios(calibration) if use_calibration else {}
+    if ratios:
+        scale = float(np.median(ratios))
+    elif isinstance(calibration, dict) and calibration.get("global_ratio"):
+        scale = float(calibration["global_ratio"])
+    else:
+        scale = 1.0
     sources = tuple("measured" if all(c in m for c in cs) else "model"
                     for m, cs in zip(measured, cands))
     return ForwardCostOracle(n=n, e=e, specs=specs, cands=cands,
                              measured=tuple(measured), scale=scale,
-                             sources=sources)
+                             sources=sources, class_scale=class_scale)
 
 
 # ---------------------------------------------------------------------------

@@ -402,14 +402,22 @@ def layer_order_costs(n: int, e: int, d_in: int, d_out: int, *,
     validates it by measurement anyway.
     """
     def spmm(d: int) -> float:
-        flops = 2.0 * e * d
-        bytes_ = (e * d + 2.0 * n * d) * bytes_per_el   # gathers + in/out rows
-        return bytes_ + flops / balance
+        return spmm_cost(n, e, d, bytes_per_el=bytes_per_el, balance=balance)
 
     matmul = ((n * d_in + n * d_out + d_in * d_out) * bytes_per_el
               + 2.0 * n * d_in * d_out / balance)
     return {"aggregate_first": spmm(d_in) + matmul,
             "update_first": matmul + spmm(d_out)}
+
+
+def spmm_cost(n: int, e: int, d: int, *, bytes_per_el: int = 4,
+              balance: float = 8.0) -> float:
+    """Byte-equivalent cost of one SpMM at feature width ``d`` — the unit
+    the whole cold cost model (and its calibration, :mod:`repro.obs.audit`)
+    is denominated in."""
+    flops = 2.0 * e * d
+    bytes_ = (e * d + 2.0 * n * d) * bytes_per_el   # gathers + in/out rows
+    return bytes_ + flops / balance
 
 
 def choose_order(n: int, e: int, d_in: int, d_out: int) -> str:

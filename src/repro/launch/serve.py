@@ -135,12 +135,24 @@ def main(argv=None):
                     help="dataset scale for citeseer-s/reddit stand-ins")
     ap.add_argument("--no-oracle", action="store_true")
     obs.add_cli_flags(ap)
+    ap.add_argument("--summary", action="store_true",
+                    help="after the run, print the repro.obs.summary "
+                         "one-pager for --metrics-out / --trace files "
+                         "(per-layer cache hit rates, queue-depth "
+                         "high-watermark, latency percentiles)")
     args = ap.parse_args(argv)
-    with obs.observed_run(args.metrics_out, args.trace):
-        if args.graph is not None:
-            serve_graph(args)
-        else:
-            serve_lm(args)
+    if args.summary and not (args.metrics_out or args.trace):
+        ap.error("--summary needs --metrics-out and/or --trace")
+    try:
+        with obs.observed_run(args.metrics_out, args.trace):
+            if args.graph is not None:
+                serve_graph(args)
+            else:
+                serve_lm(args)
+    finally:
+        if args.summary:
+            from ..obs import summary as _summary
+            _summary.main([f for f in (args.metrics_out, args.trace) if f])
 
 
 if __name__ == "__main__":

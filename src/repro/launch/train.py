@@ -138,32 +138,42 @@ def main(argv=None):
                          "'blockell' keeps the PR 3 aggregation-only plan "
                          "+ separate matmul")
     obs.add_cli_flags(ap)
+    ap.add_argument("--summary", action="store_true",
+                    help="after the run, print the repro.obs.summary "
+                         "one-pager for --metrics-out / --trace files")
     args = ap.parse_args(argv)
+    if args.summary and not (args.metrics_out or args.trace):
+        ap.error("--summary needs --metrics-out and/or --trace")
     spec = get(args.arch)
-    with obs.observed_run(args.metrics_out, args.trace):
-        if args.dist:
-            if spec.family != "gnn":
-                ap.error(f"--dist supports GNN archs; {args.arch} is "
-                         f"family '{spec.family}'")
-            if args.ckpt is not None:
-                ap.error("--ckpt is not supported with --dist yet")
-            from ..dist import train_distributed
-            res = train_distributed(args.arch, steps=args.steps,
-                                    parts=args.parts)
-            losses = res["losses"]
-            print(f"{args.arch} [dist]: {len(losses)} steps, loss "
-                  f"{losses[0]:.4f} -> {losses[-1]:.4f}")
-            return
-        driver = {"lm": lm_reduced_driver, "gnn": gnn_driver,
-                  "recsys": recsys_driver}[spec.family]
-        if spec.family == "gnn":
-            res = driver(args.arch, args.steps, args.ckpt,
-                         executor=args.executor)
-        else:
-            res = driver(args.arch, args.steps, args.ckpt)
-        print(f"{args.arch}: {res.steps} steps, loss "
-              f"{res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
-              f"{res.wall_time:.1f}s, stragglers={res.straggler_flags}")
+    try:
+        with obs.observed_run(args.metrics_out, args.trace):
+            if args.dist:
+                if spec.family != "gnn":
+                    ap.error(f"--dist supports GNN archs; {args.arch} is "
+                             f"family '{spec.family}'")
+                if args.ckpt is not None:
+                    ap.error("--ckpt is not supported with --dist yet")
+                from ..dist import train_distributed
+                res = train_distributed(args.arch, steps=args.steps,
+                                        parts=args.parts)
+                losses = res["losses"]
+                print(f"{args.arch} [dist]: {len(losses)} steps, loss "
+                      f"{losses[0]:.4f} -> {losses[-1]:.4f}")
+                return
+            driver = {"lm": lm_reduced_driver, "gnn": gnn_driver,
+                      "recsys": recsys_driver}[spec.family]
+            if spec.family == "gnn":
+                res = driver(args.arch, args.steps, args.ckpt,
+                             executor=args.executor)
+            else:
+                res = driver(args.arch, args.steps, args.ckpt)
+            print(f"{args.arch}: {res.steps} steps, loss "
+                  f"{res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
+                  f"{res.wall_time:.1f}s, stragglers={res.straggler_flags}")
+    finally:
+        if args.summary:
+            from ..obs import summary as _summary
+            _summary.main([f for f in (args.metrics_out, args.trace) if f])
 
 
 if __name__ == "__main__":

@@ -17,6 +17,15 @@ reports through, with the same clock and the same schema:
   ``--metrics-out FILE.jsonl`` dump.
 * :mod:`repro.obs.validate` — schema validators for the emitted files
   (``python -m repro.obs.validate out.jsonl trace.json``), run in CI.
+* :mod:`repro.obs.summary`  — terminal one-pager over metrics JSONL +
+  traces (``python -m repro.obs.summary out.jsonl trace.json``).
+* :mod:`repro.obs.audit`    — joins measured autotune telemetry against the
+  exec cold cost model into a per-(backend, bm, compact, order) calibration
+  table keyed by ``device_sig`` (consumed by the whole-forward DP) plus a
+  drift report of model misranks (``python -m repro.obs.audit``).
+* :mod:`repro.obs.regress`  — noise-aware perf-regression gate: bootstrap
+  CIs on benchmark sample ratios, ``BENCH_trajectory.jsonl`` store
+  (``python -m repro.obs.regress compare BASE.json CURRENT.json``).
 
 Instrumented surfaces: ``exec`` (plan compiles, autotune trials, DP schedule
 verdicts, modeled HBM bytes), ``serve`` (request spans, batcher queue depth

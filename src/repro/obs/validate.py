@@ -8,6 +8,10 @@ step (``python -m repro.obs.validate out.jsonl trace.json``).
 * metrics JSONL must open with a ``repro.obs/provenance@1`` record carrying
   git SHA / timestamp / device kind / jax version, followed by
   ``repro.obs/metric@1`` or ``repro.obs/event@1`` records.
+* trajectory JSONL (``BENCH_trajectory.jsonl``) is every-line
+  ``repro.obs/trajectory@1`` rows with a ``rows`` map and ``_ts``; a
+  ``.jsonl`` file whose FIRST record carries that schema is validated as a
+  trajectory instead of a metrics dump.
 
 Each validator returns a list of human-readable problems (empty == valid).
 """
@@ -18,6 +22,7 @@ import sys
 from typing import List
 
 from .export import SCHEMA_EVENT, SCHEMA_METRIC, SCHEMA_PROVENANCE
+from .regress import SCHEMA_TRAJECTORY
 
 _PROVENANCE_KEYS = ("ts", "git_sha", "device_kind", "jax_version")
 _METRIC_TYPES = ("counter", "gauge", "histogram")
@@ -116,12 +121,55 @@ def validate_metrics_lines(lines) -> List[str]:
     return errs
 
 
+def validate_trajectory_lines(lines) -> List[str]:
+    """Problems with a ``BENCH_trajectory.jsonl`` file (every line one
+    ``repro.obs/trajectory@1`` row)."""
+    errs: List[str] = []
+    any_rows = False
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        any_rows = True
+        where = f"line {i + 1}"
+        try:
+            rec = json.loads(line)
+        except ValueError as e:
+            errs.append(f"{where}: not JSON ({e})")
+            continue
+        if rec.get("schema") != SCHEMA_TRAJECTORY:
+            errs.append(f"{where}: expected {SCHEMA_TRAJECTORY}, got "
+                        f"{rec.get('schema')!r}")
+            continue
+        if not isinstance(rec.get("rows"), dict):
+            errs.append(f"{where}: trajectory row missing 'rows' map")
+        if not isinstance(rec.get("_ts"), (int, float)):
+            errs.append(f"{where}: trajectory row missing numeric '_ts'")
+    if not any_rows:
+        errs.append("no records")
+    return errs
+
+
+def _first_schema(lines) -> str:
+    for line in lines:
+        line = line.strip()
+        if line:
+            try:
+                return json.loads(line).get("schema", "")
+            except ValueError:
+                return ""
+    return ""
+
+
 def validate_metrics_file(path: str) -> List[str]:
     try:
         with open(path) as f:
-            return validate_metrics_lines(f.readlines())
+            lines = f.readlines()
     except OSError as e:
         return [f"{path}: unreadable ({e})"]
+    if _first_schema(lines) == SCHEMA_TRAJECTORY:
+        return validate_trajectory_lines(lines)
+    return validate_metrics_lines(lines)
 
 
 def main(argv=None) -> int:

@@ -8,3 +8,18 @@ CHIPS_PER_POD = 256
 
 # DCI (inter-pod) is far slower than ICI; pod-axis collectives cross it.
 DCI_BW = 12.5e9               # B/s per chip, conservative
+
+
+def implied_bandwidth(us_per_byte_equiv: float) -> float:
+    """Effective byte-equivalents/second implied by a measured/model
+    calibration ratio (the exec cost model is denominated in
+    byte-equivalents; ``repro.obs.audit`` produces the ratio in us per
+    byte-equivalent).  Comparing against :data:`HBM_BW` places the host this
+    process measured on relative to the TARGET chip's roofline."""
+    return 1e6 / max(float(us_per_byte_equiv), 1e-30)
+
+
+def hbm_fraction(us_per_byte_equiv: float) -> float:
+    """:func:`implied_bandwidth` as a fraction of the target HBM roofline
+    (CPU hosts are expected to sit far below 1.0)."""
+    return implied_bandwidth(us_per_byte_equiv) / HBM_BW

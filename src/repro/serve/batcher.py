@@ -63,6 +63,7 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.max_wait = float(max_wait)
         self.pending: List[Request] = []
+        self.depth_hwm = 0            # deepest the queue ever got
 
     def _flush(self, t: float, reason: str) -> MicroBatch:
         obs.counter("serve.flush", reason=reason).inc()
@@ -82,6 +83,9 @@ class MicroBatcher:
     def submit(self, req: Request) -> Optional[MicroBatch]:
         """Add a request at its arrival time; returns a batch if now full."""
         self.pending.append(req)
+        if len(self.pending) > self.depth_hwm:
+            self.depth_hwm = len(self.pending)
+            obs.gauge("serve.queue_depth_hwm").set(self.depth_hwm)
         obs.gauge("serve.queue_depth").set(len(self.pending))
         if len(self.pending) >= self.max_batch:
             return self._flush(req.t_arrival, "full")

@@ -268,6 +268,7 @@ class ServeEngine:
         obs.gauge("serve.latency_p99_ms").set(p99 * 1e3)
         obs.gauge("serve.req_per_s").set(rate)
         obs.gauge("serve.max_oracle_err").set(self.max_oracle_err)
+        obs.gauge("serve.queue_depth_hwm").set(self.batcher.depth_hwm)
         if stats is None:
             return
         obs.gauge("serve.cache.hit_rate").set(stats.hit_rate)

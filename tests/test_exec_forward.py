@@ -486,3 +486,85 @@ def test_chain_builders():
     assert all(x.self_kind == "self_coeff" and x.mode == "sum" and x.relu
                for x in gi)
     assert (gi[0].d_in, gi[0].d_out, gi[1].d_in) == (12, 8, 8)
+
+
+# ============================== calibration feedback into the cold DP (PR 7)
+def _flip_setup():
+    """A 1-layer chain where both candidates are close enough that a skewed
+    per-class calibration ratio can flip the cold DP's pick."""
+    g = GRAPHS["random"]
+    specs = gcn_chain([16, 16])
+    cands = COO_CANDS
+    return g, specs, cands
+
+
+def test_skewed_calibration_flips_cold_dp(tmp_path):
+    """The acceptance criterion: a calibration table that marks one
+    candidate class as measured far slower than modeled must change the
+    cold-DP schedule."""
+    from repro.obs.audit import class_key
+    g, specs, cands = _flip_setup()
+    base = build_cost_oracle(g, specs, candidates=[cands],
+                             cache_dir=str(tmp_path), use_cache=False,
+                             use_calibration=False)
+    _, p_base = dp_schedule(base)
+    picked = p_base[0]
+    other = next(c for c in cands if c != picked)
+    # tell the oracle the picked candidate's class measures 50x its model
+    cal = {"global_ratio": 1.0,
+           "classes": {class_key(picked[2], picked[3], picked[4],
+                                 picked[0]): {"ratio": 50.0}}}
+    skewed = build_cost_oracle(g, specs, candidates=[cands],
+                               cache_dir=str(tmp_path), use_cache=False,
+                               calibration=cal)
+    assert skewed.class_scale == {class_key(picked[2], picked[3],
+                                            picked[4], picked[0]): 50.0}
+    _, p_skewed = dp_schedule(skewed)
+    assert p_skewed[0] == other
+    # per-candidate costs moved the way the table says
+    assert skewed.node_cost(0, picked) == pytest.approx(
+        50.0 * base.node_cost(0, picked))
+    assert skewed.node_cost(0, other) == pytest.approx(
+        base.node_cost(0, other))
+
+
+def test_persisted_calibration_feeds_cold_dp(tmp_path):
+    """build_cost_oracle auto-loads calibration.json (keyed by this device's
+    sig) from the cache dir: the audit's output steers the scheduler with no
+    plumbing at the call site; use_calibration=False opts out."""
+    from repro.obs.audit import (SCHEMA_CALIBRATION, class_key,
+                                 save_calibration)
+    g, specs, cands = _flip_setup()
+    base = build_cost_oracle(g, specs, candidates=[cands],
+                             cache_dir=str(tmp_path), use_cache=False,
+                             use_calibration=False)
+    _, p_base = dp_schedule(base)
+    picked = p_base[0]
+    other = next(c for c in cands if c != picked)
+    save_calibration({"schema": SCHEMA_CALIBRATION,
+                      "device_sig": at.device_sig(),
+                      "global_ratio": 1.0,
+                      "classes": {class_key(picked[2], picked[3], picked[4],
+                                            picked[0]): {"ratio": 50.0}}},
+                     str(tmp_path))
+    fed = build_cost_oracle(g, specs, candidates=[cands],
+                            cache_dir=str(tmp_path), use_cache=False)
+    _, p_fed = dp_schedule(fed)
+    assert p_fed[0] == other
+    # an explicit opt-out restores the uncalibrated schedule
+    off = build_cost_oracle(g, specs, candidates=[cands],
+                            cache_dir=str(tmp_path), use_cache=False,
+                            use_calibration=False)
+    _, p_off = dp_schedule(off)
+    assert p_off[0] == picked
+    # another device's table is never consumed
+    save_calibration({"schema": SCHEMA_CALIBRATION,
+                      "device_sig": "some-other-device",
+                      "global_ratio": 1.0,
+                      "classes": {class_key(other[2], other[3], other[4],
+                                            other[0]): {"ratio": 500.0}}},
+                     str(tmp_path))
+    again = build_cost_oracle(g, specs, candidates=[cands],
+                              cache_dir=str(tmp_path), use_cache=False)
+    assert class_key(other[2], other[3], other[4],
+                     other[0]) not in again.class_scale
