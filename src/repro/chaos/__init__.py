@@ -1,0 +1,51 @@
+"""repro.chaos — seeded, deterministic fault injection + graceful degradation.
+
+Rubik's hierarchical decomposition only pays off in production if each level
+degrades instead of dying.  This package is the proof harness: a
+:class:`FaultPlan` of scheduled faults (kernel-launch failure, NaN-producing
+backend, corrupt cache/checkpoint files, lost/straggling shards, malformed
+or burst request traffic) is armed over a block of code with
+:func:`armed`, and *named injection points* compiled into the stack fire
+exactly the faults the plan schedules for them — nothing else, nothing
+random at run time.  Two runs with the same seed see the identical fault
+schedule, so every drill is a regression test.
+
+Zero overhead when disarmed: an injection point is one module-global load
+and a ``None`` check (the same discipline as :mod:`repro.obs`'s gated
+metrics) — production hot paths pay nothing for carrying the hooks.
+
+The degradation machinery the faults exercise lives with the subsystems it
+protects:
+
+* :mod:`repro.exec.fallback`  — backend fallback chain with quarantine
+  (a failing/NaN Pallas launch demotes to jnp/coo and the autotune cache
+  remembers the quarantined verdict, so the DP stops choosing it);
+* :mod:`repro.serve`          — bounded batcher queue with admission
+  control and load shedding, per-request deadline budgets, and a degraded
+  cache-served response mode with an explicit staleness flag
+  (:class:`repro.serve.ServeSLO`);
+* :mod:`repro.dist.resilient` — straggler/shard-loss timeout on
+  ``halo_aggregate`` falling back to ``allgather_aggregate`` for the
+  affected step;
+* :mod:`repro.train`          — checkpoint-corruption fallback to the
+  previous checkpoint + the injected-crash resume drill.
+
+``python -m repro.chaos.drill --seed 0`` runs the whole gauntlet end to end
+and audits it through :mod:`repro.obs`.
+"""
+from .inject import (Fault, FaultPlan, FaultInjector, InjectedFault,
+                     armed, active, fire, fail_point, mangle,
+                     corrupt_file, KINDS)
+
+__all__ = ["Fault", "FaultPlan", "FaultInjector", "InjectedFault",
+           "armed", "active", "fire", "fail_point", "mangle",
+           "corrupt_file", "KINDS", "adversarial_trace"]
+
+
+def __getattr__(name: str):
+    # traffic pulls in repro.serve; loading it lazily keeps the injection
+    # hooks importable from repro.exec/dist/train without an import cycle
+    if name == "adversarial_trace":
+        from .traffic import adversarial_trace
+        return adversarial_trace
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

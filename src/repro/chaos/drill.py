@@ -1,0 +1,386 @@
+"""The chaos gauntlet: ``python -m repro.chaos.drill --seed 0``.
+
+Runs seeded fault-injection drills against every degradation path in the
+stack and asserts the graceful-degradation contract end to end:
+
+* **exec** — an injected Pallas launch failure and an injected NaN backend
+  each demote :class:`repro.exec.ResilientPlan` down the
+  ``pallas → jnp → coo`` chain, quarantine the failed engine in the autotune
+  cache, and the whole-forward DP (:func:`repro.exec.build_cost_oracle`)
+  stops choosing it.  Outputs stay finite and match the reference engine.
+* **serve** — an adversarial trace (overload burst + malformed ids) against
+  a :class:`repro.serve.ServeSLO`-guarded engine: malformed requests are
+  rejected, overload answers degrade to stale-flagged cache responses or
+  shed explicitly, the accounting closes exactly, and every *admitted*
+  request's modeled latency lands within the SLO deadline.
+* **dist** — an injected ``shard_loss`` on the halo exchange makes
+  :func:`repro.dist.resilient_halo_aggregate` fall back to the all-gather
+  path for the affected step, bit-matching the reference aggregation.
+* **train** — an injected ``crash`` mid-run, then resume: the restored run's
+  final parameters are **bit-identical** to an uninterrupted run's (the
+  at-least-once replay contract).  The newest checkpoint is then corrupted
+  (:func:`repro.chaos.corrupt_file`) and restore must fall back to the
+  previous one, counting ``train.ckpt_fallback``.
+
+The gauntlet runs **twice** with the same seed and asserts the two runs
+produced identical fault schedules and identical counter values — the
+whole drill is a pure function of the seed.  Wall-time-derived counters
+(``TIMING_COUNTERS``, e.g. the straggler watchdog) are exempt from the
+comparison: they are real measurements, warn-only here, exactly like the
+CI perf sentinel.
+
+``--metrics-out``/``--trace`` dump the second run's registry and Perfetto
+trace for ``python -m repro.obs.validate``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .. import obs
+from . import inject
+from .inject import Fault, FaultPlan
+from .traffic import adversarial_trace
+
+# counters whose values derive from wall-clock measurements; identical
+# same-seed runs may legitimately disagree on them (warn-only)
+TIMING_COUNTERS = ("train.straggler_flagged",)
+
+# the seed-derived part of the gauntlet's fault schedule (exec/dist sites);
+# the train crash keeps an explicit hit so it lands after the step-8
+# checkpoint the resume drill restores from
+SCHEDULE_SPEC = {
+    "exec.pallas_launch": [("kernel_launch", 1)],
+    "exec.kernel_result": [("nan_backend", 1)],
+    "dist.halo": [("shard_loss", 1)],
+}
+
+
+def _plans(seed: int) -> Dict[str, FaultPlan]:
+    gen = FaultPlan.generate(seed, SCHEDULE_SPEC)
+
+    def site(s: str) -> FaultPlan:
+        return FaultPlan(faults=gen.for_site(s), seed=seed)
+
+    return {"exec_launch": site("exec.pallas_launch"),
+            "exec_nan": site("exec.kernel_result"),
+            "dist": site("dist.halo"),
+            "train": FaultPlan.of(Fault("train.step", "crash", hit=10),
+                                  seed=seed)}
+
+
+class DrillFailure(AssertionError):
+    """A gauntlet contract was violated."""
+
+
+def _check(ok: bool, msg: str) -> None:
+    if not ok:
+        raise DrillFailure(msg)
+
+
+def _graph(seed: int):
+    from ..graph import DatasetSpec, synthesize
+    return synthesize(DatasetSpec("drill", 512, 6000, 32, 4, community=0.9,
+                                  num_communities=8, seed=seed + 1))
+
+
+# ------------------------------------------------------------------- exec
+def _exec_gauntlet(seed: int, workdir: str, plans: Dict[str, FaultPlan],
+                   log: Callable) -> Dict:
+    from ..exec import (ResilientPlan, build_cost_oracle, build_plan,
+                        dp_schedule, gcn_chain, graph_fingerprint,
+                        quarantined_backends)
+    g = _graph(seed)
+    x = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal((g.num_nodes, 32)).astype(np.float32))
+    ref = np.asarray(build_plan(g, "gcn", backend="coo").apply(x))
+    fp = graph_fingerprint(g)
+
+    # launch failure: pallas raises at hit 0 -> demote to jnp + quarantine
+    cache_a = os.path.join(workdir, "exec_cache_a")
+    rp = ResilientPlan(g, "gcn", backend="pallas", cache_dir=cache_a)
+    with inject.armed(plans["exec_launch"]):
+        y = np.asarray(rp.apply(x))
+    _check(rp.verdict is not None and rp.verdict.degraded,
+           "exec: launch fault did not demote the backend")
+    _check(rp.verdict.backend != "pallas",
+           "exec: still serving from the failed backend")
+    _check(np.isfinite(y).all() and np.allclose(y, ref, atol=1e-4),
+           "exec: degraded output does not match the reference engine")
+    _check("pallas" in quarantined_backends(fp, cache_dir=cache_a),
+           "exec: failed backend was not quarantined")
+    y2 = np.asarray(rp.apply(x))        # disarmed: healthy, no retry of pallas
+    _check(not rp.verdict.degraded and np.allclose(y2, ref, atol=1e-4),
+           "exec: post-fault call should be healthy on the fallback")
+
+    # NaN backend: pallas result mangled -> finiteness probe demotes it
+    cache_b = os.path.join(workdir, "exec_cache_b")
+    rp2 = ResilientPlan(g, "gcn", backend="pallas", cache_dir=cache_b)
+    with inject.armed(plans["exec_nan"]):
+        y3 = np.asarray(rp2.apply(x))
+    _check(np.isfinite(y3).all() and np.allclose(y3, ref, atol=1e-4),
+           "exec: NaN fault leaked a non-finite/wrong output")
+    _check(any(r == "nonfinite_output" for _, r in rp2.verdict.attempts),
+           "exec: finiteness probe did not catch the NaN backend")
+
+    # the DP must stop choosing the quarantined engine on this graph (an
+    # explicit grid that includes pallas, so the check bites on CPU too)
+    grid = [("aggregate_first", False, "coo", 128, True),
+            ("aggregate_first", False, "jnp", 64, True),
+            ("aggregate_first", True, "pallas", 128, True)]
+    oracle = build_cost_oracle(g, gcn_chain([32, 32, 4]), candidates=[grid],
+                               cache_dir=cache_b, use_cache=False)
+    _check(all(c[2] != "pallas" for cs in oracle.cands for c in cs),
+           "exec: quarantined backend still in the DP candidate sets")
+    _, sched = dp_schedule(oracle)
+    _check(all(c[2] != "pallas" for c in sched),
+           "exec: DP still schedules the quarantined backend")
+    loose = build_cost_oracle(g, gcn_chain([32, 32, 4]), candidates=[grid],
+                              cache_dir=cache_b, use_cache=False,
+                              respect_quarantine=False)
+    _check(any(c[2] == "pallas" for cs in loose.cands for c in cs),
+           "exec: respect_quarantine=False should keep the full grid")
+    log(f"  exec: demoted pallas->{rp.verdict.backend}, quarantined, "
+        f"DP schedule avoids it ({len(sched)} layers)")
+    return {"fallback_backend": rp.verdict.backend,
+            "dp_backends": sorted({c[2] for c in sched})}
+
+
+# ------------------------------------------------------------------ serve
+def _serve_gauntlet(seed: int, log: Callable) -> Dict:
+    from ..serve import (EmbeddingCache, MicroBatcher, ServeEngine, ServeSLO,
+                         make_session)
+    g = _graph(seed)
+    sess = make_session("gcn", g=g, hidden=32, out_dim=8, seed=seed)
+    cache = EmbeddingCache(sess.layer_dims, capacity_bytes=1 << 22,
+                           num_nodes=g.num_nodes)
+    slo = ServeSLO(deadline_s=8e-3, max_queue=64)
+    engine = ServeEngine(sess, cache,
+                         MicroBatcher(max_batch=32, max_wait=2e-3,
+                                      max_queue=slo.max_queue),
+                         oracle_check=True, keep_records=True, slo=slo)
+    engine.warm(np.arange(g.num_nodes))
+    trace = adversarial_trace(g.num_nodes, 2000, rate=8000.0, overload=10.0,
+                              malformed_fraction=0.02, seed=seed)
+    rep = engine.serve(trace)
+
+    outcomes = [r.outcome for r in engine.records]
+    _check(all(o in ("exact", "degraded", "shed", "rejected")
+               for o in outcomes), "serve: unflagged response outcome")
+    n_exact = sum(o == "exact" for o in outcomes)
+    _check(n_exact + rep.num_degraded + rep.num_shed + rep.num_rejected
+           == len(trace),
+           f"serve: accounting leak — {n_exact}+{rep.num_degraded}"
+           f"+{rep.num_shed}+{rep.num_rejected} != {len(trace)}")
+    _check(rep.num_rejected > 0, "serve: malformed traffic was not rejected")
+    _check(rep.num_degraded + rep.num_shed > 0,
+           "serve: overload produced no degradation (drill too gentle)")
+    _check(all(r.stale for r in engine.records if r.outcome == "degraded"),
+           "serve: degraded response missing the stale flag")
+    admitted = np.asarray([r.latency for r in engine.records
+                           if r.outcome == "exact"])
+    p99 = float(np.percentile(admitted, 99)) if admitted.size else 0.0
+    _check(p99 <= slo.deadline_s + 1e-9,
+           f"serve: admitted p99 {p99 * 1e3:.2f}ms blows the "
+           f"{slo.deadline_s * 1e3:.0f}ms SLO")
+    _check(rep.max_oracle_err < 1e-3,
+           f"serve: oracle error {rep.max_oracle_err:.2e} on exact answers")
+    log(f"  serve: {n_exact} exact / {rep.num_degraded} degraded(stale) / "
+        f"{rep.num_shed} shed / {rep.num_rejected} rejected; admitted p99 "
+        f"{p99 * 1e3:.2f}ms <= {slo.deadline_s * 1e3:.0f}ms SLO")
+    return {"exact": n_exact, "degraded": rep.num_degraded,
+            "shed": rep.num_shed, "rejected": rep.num_rejected,
+            "admitted_p99_ms": p99 * 1e3}
+
+
+# ------------------------------------------------------------------- dist
+def _dist_gauntlet(seed: int, plans: Dict[str, FaultPlan],
+                   log: Callable) -> Dict:
+    from ..dist import (allgather_aggregate, build_send_plan,
+                        resilient_halo_aggregate)
+    from ..dist.gnn import pad_graph_nodes
+    from ..graph import build_halo_plan
+    parts = jax.device_count()
+    g = pad_graph_nodes(_graph(seed), parts)
+    local_n = g.num_nodes // parts
+    plan = build_halo_plan(g, parts)
+    send = build_send_plan(plan)
+    mesh = jax.make_mesh((parts,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(np.random.default_rng(seed + 3)
+                    .standard_normal((g.num_nodes, 16)).astype(np.float32))
+    with mesh:
+        ref = np.asarray(allgather_aggregate(mesh, x, plan, local_n))
+        with inject.armed(plans["dist"]) as inj:
+            y_fb = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
+                                                       local_n))
+        y_ok = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
+                                                   local_n))
+    _check(len(inj.fired) == 1 and inj.fired[0].kind == "shard_loss",
+           "dist: shard-loss fault did not fire")
+    _check(np.allclose(y_fb, ref, atol=1e-4),
+           "dist: fallback aggregation diverges from the all-gather path")
+    _check(np.allclose(y_ok, ref, atol=1e-4),
+           "dist: healthy halo step diverges after the fallback")
+    log(f"  dist: shard loss on {parts}-part mesh -> allgather fallback, "
+        f"next step healthy on halo")
+    return {"parts": parts}
+
+
+# ------------------------------------------------------------------ train
+def _noop(*a, **kw):
+    pass
+
+
+def _train_gauntlet(seed: int, workdir: str, plans: Dict[str, FaultPlan],
+                    log: Callable) -> Dict:
+    from ..train.checkpoint import latest_step, restore_checkpoint
+    from ..train.loop import fit
+    from ..train.optimizer import adam
+    rng = np.random.default_rng(seed + 7)
+    w_true = rng.standard_normal((4, 1)).astype(np.float32)
+
+    def params0():
+        return {"w": jnp.zeros((4, 1), jnp.float32)}
+
+    def batches(start):
+        i = start
+        while True:
+            r = np.random.default_rng(10_000 + i)
+            xb = r.standard_normal((16, 4)).astype(np.float32)
+            yield {"x": jnp.asarray(xb), "y": jnp.asarray(xb @ w_true)}
+            i += 1
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    steps, every = 12, 4
+    ref_dir = os.path.join(workdir, "ckpt_ref")
+    ref = fit(loss_fn, adam(1e-2), params0(), batches(0), steps,
+              ckpt_dir=ref_dir, ckpt_every=every, log_every=0, log=_noop)
+
+    # crash at step 10, then resume from the step-8 checkpoint
+    crash_dir = os.path.join(workdir, "ckpt_crash")
+    crashed = False
+    try:
+        with inject.armed(plans["train"]):
+            fit(loss_fn, adam(1e-2), params0(), batches(0), steps,
+                ckpt_dir=crash_dir, ckpt_every=every, log_every=0, log=_noop)
+    except inject.InjectedFault:
+        crashed = True
+    _check(crashed, "train: injected crash did not fire")
+    for _ in range(250):                # async writer may still be flushing
+        if latest_step(crash_dir) == 8:
+            break
+        time.sleep(0.02)
+    _check(latest_step(crash_dir) == 8,
+           f"train: expected checkpoint 8 after crash, "
+           f"found {latest_step(crash_dir)}")
+    res = fit(loss_fn, adam(1e-2), params0(), batches(9), steps,
+              ckpt_dir=crash_dir, ckpt_every=every, log_every=0, log=_noop)
+    leaves_ref = jax.tree_util.tree_leaves(ref.params)
+    leaves_res = jax.tree_util.tree_leaves(res.params)
+    identical = all(np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(leaves_ref, leaves_res))
+    _check(identical,
+           "train: crash+resume params are not bit-identical to the "
+           "uninterrupted run")
+
+    # corrupt the newest checkpoint: restore must fall back to the previous
+    newest = latest_step(crash_dir)
+    fell_back_before = obs.snapshot()["counters"].get(
+        "train.ckpt_fallback", 0)
+    inject.corrupt_file(
+        os.path.join(crash_dir, f"step_{newest:08d}.npz"),
+        seed=seed, mode="truncate")
+    opt = adam(1e-2)
+    p_t = params0()
+    _, _, got_step = restore_checkpoint(crash_dir, p_t, opt.init(p_t))
+    _check(got_step < newest,
+           f"train: restore served the corrupt checkpoint {newest}")
+    _check(obs.snapshot()["counters"].get("train.ckpt_fallback", 0)
+           > fell_back_before,
+           "train: ckpt fallback did not count train.ckpt_fallback")
+    log(f"  train: crash@10 -> resume from ckpt 8, bit-identical replay; "
+        f"corrupt ckpt {newest} -> fell back to ckpt {got_step}")
+    return {"crash_hit": 10, "resumed_from": 8, "corrupt_fallback": got_step}
+
+
+# ----------------------------------------------------------------- driver
+def run_gauntlets(seed: int, workdir: str, log: Callable = print) -> Dict:
+    """One full pass; returns {schedules, summary, counters}."""
+    plans = _plans(seed)
+    summary = {"exec": _exec_gauntlet(seed, workdir, plans, log),
+               "serve": _serve_gauntlet(seed, log),
+               "dist": _dist_gauntlet(seed, plans, log),
+               "train": _train_gauntlet(seed, workdir, plans, log)}
+    counters = {k: v for k, v in obs.snapshot()["counters"].items()
+                if not k.startswith(TIMING_COUNTERS)}
+    return {"schedules": {k: p.describe() for k, p in plans.items()},
+            "summary": summary, "counters": counters}
+
+
+def run_drill(seed: int = 0, metrics_out: Optional[str] = None,
+              trace: Optional[str] = None, log: Callable = print) -> Dict:
+    """Run the gauntlet twice with the same seed; assert determinism."""
+    runs: List[Dict] = []
+    for attempt in (1, 2):
+        log(f"chaos drill: run {attempt}/2 (seed {seed})")
+        obs.reset()
+        obs.enable()
+        if attempt == 2 and trace:
+            obs.start_trace()
+        with tempfile.TemporaryDirectory(prefix="chaos_drill_") as workdir:
+            runs.append(run_gauntlets(seed, workdir, log))
+    if metrics_out:
+        obs.dump_metrics_jsonl(metrics_out)
+        log(f"chaos drill: metrics -> {metrics_out}")
+    if trace:
+        obs.stop_trace(trace)
+        log(f"chaos drill: trace -> {trace}")
+
+    a, b = runs
+    _check(a["schedules"] == b["schedules"],
+           "determinism: the two same-seed runs derived different "
+           "fault schedules")
+    _check(a["summary"] == b["summary"],
+           "determinism: the two same-seed runs disagree on outcomes")
+    if a["counters"] != b["counters"]:
+        diff = {k for k in set(a["counters"]) | set(b["counters"])
+                if a["counters"].get(k) != b["counters"].get(k)}
+        raise DrillFailure(f"determinism: counter values diverge on {diff}")
+    log("chaos drill: PASS — two same-seed runs, identical fault schedules "
+        "and counter values")
+    return a
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.chaos.drill",
+        description="seeded chaos gauntlet across exec/serve/dist/train")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump the registry as metrics JSONL "
+                         "(repro.obs.validate-able)")
+    ap.add_argument("--trace", default=None,
+                    help="write a Perfetto trace of the second run")
+    args = ap.parse_args(argv)
+    try:
+        run_drill(args.seed, metrics_out=args.metrics_out, trace=args.trace)
+    except DrillFailure as e:
+        print(f"chaos drill: FAIL — {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,7 @@ _EXPORTS = {
     "SendPlan": "plan", "build_send_plan": "plan",
     "collective_bytes_estimate": "plan",
     "halo_aggregate": "halo", "allgather_aggregate": "halo",
+    "resilient_halo_aggregate": "resilient",
     "distributed_decode_attention": "attention",
     "quantize_int8": "compress", "dequantize_int8": "compress",
     "int8_allreduce_psum": "compress", "topk_compress": "compress",

@@ -83,13 +83,20 @@ def dist_gnn_apply(mesh, params, x: jax.Array, plan: HaloPlan,
     ``deg`` (N,) switches the neighborhood sum to a mean (GraphSAGE-mean);
     None keeps the raw (edge-weighted) sum, which is exact GCN when the
     plan's edge weights carry the symmetric normalization.
-    ``aggregator`` selects the collective: "halo" or "allgather" baseline.
+    ``aggregator`` selects the collective: "halo", the "allgather" baseline,
+    or "resilient" (halo with per-step fallback to allgather on shard
+    loss/straggler — :mod:`repro.dist.resilient`).
     """
-    agg_fn = halo_aggregate if aggregator == "halo" else allgather_aggregate
+    if aggregator == "resilient":
+        from .resilient import resilient_halo_aggregate as agg_fn
+    else:
+        agg_fn = (halo_aggregate if aggregator == "halo"
+                  else allgather_aggregate)
     h = x
     for i, lp in enumerate(params):
-        a = agg_fn(mesh, h, plan, send, local_n) if aggregator == "halo" \
-            else agg_fn(mesh, h, plan, local_n)
+        a = (agg_fn(mesh, h, plan, send, local_n)
+             if aggregator in ("halo", "resilient")
+             else agg_fn(mesh, h, plan, local_n))
         if deg is not None:
             a = a / jnp.maximum(deg, 1.0)[:, None]
         h = h @ lp["w_self"] + a @ lp["w_neigh"] + lp["b"]

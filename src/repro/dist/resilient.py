@@ -1,0 +1,61 @@
+"""Straggler/shard-loss fallback for the halo exchange.
+
+``halo_aggregate`` is the efficient collective (cut-edge rows only), but it
+is also the fragile one: it needs every shard of the ``all_to_all`` to show
+up.  :func:`resilient_halo_aggregate` is the drop-in wrapper that degrades
+instead of hanging: when the exchange fails — a lost shard raising out of
+the collective, an injected ``dist.halo`` fault from a chaos drill, or a
+wall-clock straggler timeout (``timeout_s``) — the *affected step* is
+recomputed through ``allgather_aggregate``, which ships the full feature
+table and depends on no per-shard send tables.  Correct but slower; the
+next step tries the halo path again (a straggler is transient, unlike a
+quarantined exec backend).
+
+Every fallback counts ``dist.halo_fallback{reason=...}`` and drops a trace
+instant, so a drill (or production) can audit exactly which steps degraded.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+
+from . import compat  # noqa: F401
+from .. import obs
+from ..chaos import inject as chaos
+from .halo import allgather_aggregate, halo_aggregate
+
+
+def _fallback(mesh, x, plan, local_n, axis_name, reason: str) -> jax.Array:
+    obs.counter("dist.halo_fallback", reason=reason).inc()
+    obs.instant("dist.halo_fallback", cat="dist", reason=reason)
+    return allgather_aggregate(mesh, x, plan, local_n, axis_name)
+
+
+def resilient_halo_aggregate(mesh, x, plan, send, local_n,
+                             axis_name: Optional[str] = None,
+                             timeout_s: Optional[float] = None) -> jax.Array:
+    """``halo_aggregate`` that falls back to ``allgather_aggregate`` for the
+    affected step on shard loss, collective failure, or straggler timeout.
+
+    ``timeout_s`` arms the wall-clock watchdog: the halo result is forced
+    (``block_until_ready``) and, if the exchange straggled past the budget,
+    discarded and recomputed via the all-gather path.  Leave it ``None``
+    under jit (forcing the value defeats async dispatch) — deterministic
+    drills use the ``dist.halo`` injection point instead.
+    """
+    f = chaos.fire("dist.halo")
+    if f is not None and f.kind in ("shard_loss", "straggler"):
+        return _fallback(mesh, x, plan, local_n, axis_name, f.kind)
+    try:
+        if timeout_s is None:
+            return halo_aggregate(mesh, x, plan, send, local_n, axis_name)
+        t0 = time.perf_counter()
+        y = jax.block_until_ready(
+            halo_aggregate(mesh, x, plan, send, local_n, axis_name))
+        if time.perf_counter() - t0 > timeout_s:
+            return _fallback(mesh, x, plan, local_n, axis_name, "timeout")
+        return y
+    except Exception:
+        return _fallback(mesh, x, plan, local_n, axis_name, "exchange_error")

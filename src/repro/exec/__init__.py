@@ -44,7 +44,11 @@ from .autotune import (autotune, autotune_plan, autotune_layer,
                        autotune_layer_plan, graph_fingerprint, device_sig,
                        AutotuneRecord, LayerAutotuneRecord,
                        default_candidates, default_layer_candidates,
-                       cached_layer_costs, prune_cache, CACHE_MAX_ENTRIES)
+                       cached_layer_costs, prune_cache, CACHE_MAX_ENTRIES,
+                       record_quarantine, quarantined_backends,
+                       clear_quarantine)
+from .fallback import (ResilientPlan, FallbackVerdict, BackendFailure,
+                       parity_probe, FALLBACK_CHAIN)
 from .forward import (LayerSpec, ForwardExecutionPlan, ForwardAutotuneRecord,
                       ForwardCostOracle, build_cost_oracle, dp_schedule,
                       exhaustive_schedule, plan_forward, build_forward_plan,

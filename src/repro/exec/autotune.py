@@ -215,6 +215,63 @@ def prune_cache(max_entries: int = CACHE_MAX_ENTRIES,
     return len(entries)
 
 
+# ------------------------------------------------------------- quarantine
+def quarantine_key(fingerprint: str, backend: str,
+                   platform: Optional[str] = None) -> str:
+    return f"{fingerprint}:quarantine:{backend}:{device_sig(platform)}"
+
+
+def record_quarantine(fingerprint: str, backend: str, *, reason: str = "",
+                      platform: Optional[str] = None,
+                      cache_dir: Optional[str] = None) -> None:
+    """Persist a "this backend failed on this graph" verdict next to the
+    autotune entries (:mod:`repro.exec.fallback` writes one when a launch
+    raises or flunks the parity probe), so every later scheduler on this
+    device — the DP oracle included — stops choosing the backend."""
+    obs.counter("exec.quarantine", backend=backend).inc()
+    obs.instant("exec.quarantine", cat="exec", backend=backend,
+                reason=reason, fingerprint=fingerprint)
+    try:
+        _cache_put(_cache_path(cache_dir),
+                   quarantine_key(fingerprint, backend, platform),
+                   {"quarantined": True, "reason": reason})
+    except OSError:
+        pass              # read-only FS: the in-process fallback still held
+
+
+def quarantined_backends(fingerprint: str, *,
+                         platform: Optional[str] = None,
+                         cache_dir: Optional[str] = None) -> set:
+    """The backends quarantined for this graph on this device."""
+    prefix = f"{fingerprint}:quarantine:"
+    suffix = f":{device_sig(platform)}"
+    out = set()
+    for key, e in _cache_load(_cache_path(cache_dir)).items():
+        if (key.startswith(prefix) and key.endswith(suffix)
+                and isinstance(e, dict) and e.get("quarantined")):
+            out.add(key[len(prefix):len(key) - len(suffix)])
+    return out
+
+
+def clear_quarantine(fingerprint: str, *, platform: Optional[str] = None,
+                     cache_dir: Optional[str] = None) -> int:
+    """Lift every quarantine for this graph on this device (e.g. after a
+    driver upgrade); returns how many verdicts were removed."""
+    path = _cache_path(cache_dir)
+    entries = _cache_load(path)
+    victims = [quarantine_key(fingerprint, b, platform)
+               for b in quarantined_backends(fingerprint, platform=platform,
+                                             cache_dir=cache_dir)]
+    for k in victims:
+        entries.pop(k, None)
+    if victims:
+        try:
+            _cache_store(path, entries)
+        except OSError:
+            pass
+    return len(victims)
+
+
 def cached_layer_costs(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
                        relu: bool = True, bias: bool = True,
                        platform: Optional[str] = None,
@@ -229,14 +286,24 @@ def cached_layer_costs(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
               f"r{int(relu)}b{int(bias)}:{device_sig(platform)}:")
     out: Dict[LayerCandidate, float] = {}
     for key, e in _cache_load(_cache_path(cache_dir)).items():
-        if not key.startswith(prefix):
+        if not key.startswith(prefix) or not isinstance(e, dict):
             continue
-        for row in e.get("table", ()):
-            order, fuse, backend, bm, compact, us = row
-            cand = (str(order), bool(fuse), str(backend), int(bm),
-                    bool(compact))
+        rows = e.get("table", ())
+        if not isinstance(rows, (list, tuple)):
+            obs.counter("exec.autotune.cache", result="corrupt").inc()
+            continue
+        for row in rows:
+            # a corrupt row is skipped, never allowed to poison the DP
+            try:
+                order, fuse, backend, bm, compact, us = row
+                cand = (str(order), bool(fuse), str(backend), int(bm),
+                        bool(compact))
+                us = float(us)
+            except (TypeError, ValueError):
+                obs.counter("exec.autotune.cache", result="corrupt").inc()
+                continue
             if cand not in out or us < out[cand]:
-                out[cand] = float(us)
+                out[cand] = us
     return out
 
 
@@ -289,12 +356,18 @@ def autotune(g: Graph, d: int, mode: str = "gcn", *,
     path = _cache_path(cache_dir)
     entries = _cache_load(path)
     if not force and key in entries:
-        obs.counter("exec.autotune.cache", result="hit").inc()
         e = entries[key]
-        return AutotuneRecord(key=key, backend=e["backend"], bm=e["bm"],
-                              compact=e["compact"], us=e["us"],
-                              table=tuple(tuple(r) for r in e.get("table", ())),
-                              from_cache=True)
+        try:      # a corrupt entry is a miss (re-measure), never a crash
+            rec = AutotuneRecord(
+                key=key, backend=str(e["backend"]), bm=int(e["bm"]),
+                compact=bool(e["compact"]), us=float(e["us"]),
+                table=tuple(tuple(r) for r in e.get("table", ())),
+                from_cache=True)
+        except (KeyError, TypeError, ValueError, AttributeError):
+            obs.counter("exec.autotune.cache", result="corrupt").inc()
+        else:
+            obs.counter("exec.autotune.cache", result="hit").inc()
+            return rec
     obs.counter("exec.autotune.cache", result="miss").inc()
 
     x = jnp.asarray(np.random.default_rng(seed)
@@ -449,14 +522,20 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
     path = _cache_path(cache_dir)
     entries = _cache_load(path)
     if not force and key in entries:
-        obs.counter("exec.autotune.cache", result="hit").inc()
         e = entries[key]
-        return LayerAutotuneRecord(
-            key=key, order=e["order"], fuse=e["fuse"], backend=e["backend"],
-            bm=e["bm"], compact=e["compact"], us=e["us"],
-            model_order=e.get("model_order", model_order),
-            table=tuple(tuple(r) for r in e.get("table", ())),
-            from_cache=True)
+        try:      # a corrupt entry is a miss (re-measure), never a crash
+            rec = LayerAutotuneRecord(
+                key=key, order=str(e["order"]), fuse=bool(e["fuse"]),
+                backend=str(e["backend"]), bm=int(e["bm"]),
+                compact=bool(e["compact"]), us=float(e["us"]),
+                model_order=str(e.get("model_order", model_order)),
+                table=tuple(tuple(r) for r in e.get("table", ())),
+                from_cache=True)
+        except (KeyError, TypeError, ValueError, AttributeError):
+            obs.counter("exec.autotune.cache", result="corrupt").inc()
+        else:
+            obs.counter("exec.autotune.cache", result="hit").inc()
+            return rec
     obs.counter("exec.autotune.cache", result="miss").inc()
 
     rng = np.random.default_rng(seed)

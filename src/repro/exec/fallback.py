@@ -1,0 +1,161 @@
+"""Backend fallback chain with quarantine — exec's graceful degradation.
+
+A Pallas launch can die two ways: it raises (driver/launch failure — or, in
+a drill, :class:`repro.chaos.InjectedFault`), or it returns garbage (a
+NaN-producing backend).  :class:`ResilientPlan` wraps the plan chain
+``pallas → jnp → coo`` so either failure mode demotes to the next engine for
+the SAME call — the caller always gets a finite answer from some backend or
+the last backend's exception, never silent NaNs.
+
+A failed backend is **quarantined**: the verdict is written into the
+autotune disk cache (:func:`repro.exec.autotune.record_quarantine`, keyed by
+graph fingerprint + device signature), ``exec.quarantine`` is counted, and
+:func:`repro.exec.forward.build_cost_oracle` drops the backend from every
+layer's candidate set — the whole-forward DP stops choosing an engine this
+machine has seen fail on this graph.  In-process, the chain also stops
+retrying it (``chain`` is re-consulted per call).
+
+The finiteness probe on the winning output is one ``isfinite`` reduction per
+call; pass ``probe=False`` to trust the backend (the caller can still probe
+externally with :func:`parity_probe`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .. import obs
+from ..chaos.inject import InjectedFault
+from ..graph.structure import Graph
+from .plan import GraphExecutionPlan, build_plan
+from .autotune import (graph_fingerprint, quarantined_backends,
+                       record_quarantine)
+
+FALLBACK_CHAIN = ("pallas", "jnp", "coo")
+
+
+class BackendFailure(RuntimeError):
+    """A backend produced an unusable result (e.g. non-finite output)."""
+
+    def __init__(self, backend: str, reason: str):
+        super().__init__(f"backend {backend!r} failed: {reason}")
+        self.backend = backend
+        self.reason = reason
+
+
+def parity_probe(plan: GraphExecutionPlan, ref: GraphExecutionPlan, *,
+                 d: int = 8, seed: int = 0, rtol: float = 1e-4,
+                 atol: float = 1e-4) -> bool:
+    """Does ``plan`` agree with ``ref`` on a seeded probe input?
+
+    A cheap narrow-width forward comparison (``d`` columns) against a
+    trusted engine — the offline counterpart of the per-call finiteness
+    check, for callers who want to vet a backend before promoting it."""
+    x = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal((plan.num_nodes, d)).astype(np.float32))
+    try:
+        y = np.asarray(plan.apply(x))
+        y_ref = np.asarray(ref.apply(x))
+    except Exception:
+        return False
+    return bool(np.isfinite(y).all()
+                and np.allclose(y, y_ref, rtol=rtol, atol=atol))
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackVerdict:
+    """What one ``apply`` call actually ran: the serving backend, whether it
+    was a demotion, and every (backend, reason) attempt that failed first."""
+    backend: str
+    degraded: bool
+    attempts: Tuple[Tuple[str, str], ...] = ()
+
+
+class ResilientPlan:
+    """A :class:`GraphExecutionPlan` chain that degrades instead of dying.
+
+    ``apply(x)`` tries the primary backend, then each fallback, quarantining
+    every engine that raises or emits non-finite output.  Fallback plans are
+    built lazily and memoized, so the healthy path holds exactly one plan.
+    ``verdict`` records what the most recent call ran.
+    """
+
+    def __init__(self, g: Graph, mode: str = "gcn", *,
+                 backend: Optional[str] = None, bm: int = 128,
+                 compact: bool = True, probe: bool = True,
+                 cache_dir: Optional[str] = None,
+                 platform: Optional[str] = None):
+        self.g = g
+        self.mode = mode
+        self.bm = bm
+        self.compact = compact
+        self.probe = probe
+        self.cache_dir = cache_dir
+        self.platform = platform
+        self.fingerprint = graph_fingerprint(g)
+        primary = backend or ("pallas" if jax.default_backend() == "tpu"
+                              else "coo")
+        chain = [primary] + [b for b in FALLBACK_CHAIN if b != primary]
+        bad = quarantined_backends(self.fingerprint, platform=platform,
+                                   cache_dir=cache_dir)
+        # never filter down to nothing: coo (pure segment-sum, no kernels)
+        # is the engine of last resort even while quarantined
+        self.chain: List[str] = ([b for b in chain if b not in bad]
+                                 or ["coo"])
+        self._plans: Dict[str, GraphExecutionPlan] = {}
+        self.verdict: Optional[FallbackVerdict] = None
+
+    def plan_for(self, backend: str) -> GraphExecutionPlan:
+        if backend not in self._plans:
+            self._plans[backend] = build_plan(
+                self.g, self.mode, bm=self.bm, bk=self.bm, backend=backend,
+                compact=self.compact)
+        return self._plans[backend]
+
+    @property
+    def backend(self) -> str:
+        return self.chain[0]
+
+    def _quarantine(self, backend: str, reason: str) -> None:
+        record_quarantine(self.fingerprint, backend, reason=reason,
+                          platform=self.platform, cache_dir=self.cache_dir)
+        if backend in self.chain and len(self.chain) > 1:
+            self.chain.remove(backend)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        attempts: List[Tuple[str, str]] = []
+        last_err: Optional[BaseException] = None
+        for backend in list(self.chain):
+            try:
+                y = self.plan_for(backend).apply(x)
+                if self.probe and not bool(jnp.all(jnp.isfinite(y))):
+                    raise BackendFailure(backend, "nonfinite_output")
+            except InjectedFault as err:
+                reason, last_err = err.fault.kind, err
+            except BackendFailure as err:
+                reason, last_err = err.reason, err
+            except Exception as err:     # launch/compile failure of any stripe
+                reason, last_err = type(err).__name__, err
+            else:
+                if attempts:
+                    obs.counter("exec.fallback", backend=backend).inc()
+                    obs.instant("exec.fallback", cat="exec", backend=backend,
+                                attempts=attempts)
+                self.verdict = FallbackVerdict(backend=backend,
+                                               degraded=bool(attempts),
+                                               attempts=tuple(attempts))
+                return y
+            attempts.append((backend, reason))
+            self._quarantine(backend, reason)
+        self.verdict = FallbackVerdict(backend="", degraded=True,
+                                       attempts=tuple(attempts))
+        raise last_err if last_err is not None else RuntimeError(
+            "ResilientPlan: empty backend chain")
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.apply(x)

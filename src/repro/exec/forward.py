@@ -56,6 +56,7 @@ from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
 from .autotune import (LayerCandidate, autotune_layer, cached_layer_costs,
                        default_layer_candidates, device_sig,
                        graph_fingerprint, model_layer_cost_dims,
+                       quarantined_backends,
                        _cache_path, _cache_load, _cache_put)
 from ..obs.audit import cand_class, class_ratios, load_calibration
 
@@ -238,7 +239,8 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
                       platform: Optional[str] = None,
                       use_cache: bool = True,
                       calibration: Optional[dict] = None,
-                      use_calibration: bool = True) -> ForwardCostOracle:
+                      use_calibration: bool = True,
+                      respect_quarantine: bool = True) -> ForwardCostOracle:
     """Assemble the DP's cost oracle for ``specs`` over ``g``.
 
     ``use_cache=False`` forces the cold model (the ``dp-model`` schedule
@@ -246,7 +248,10 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
     rescaled with this device's audited calibration table when one exists
     (``python -m repro.obs.audit``; pass ``calibration`` explicitly to
     override, ``use_calibration=False`` for the uncalibrated PR 5
-    behavior)."""
+    behavior).  Backends quarantined for this graph on this device
+    (:func:`repro.exec.autotune.record_quarantine` — written when a launch
+    raised or flunked the parity probe) are dropped from every layer's
+    candidate set, unless that would leave a layer with nothing to run."""
     platform = platform or jax.default_backend()
     specs = tuple(specs)
     if candidates is None:
@@ -260,6 +265,13 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
     if len(cands) != len(specs):
         raise ValueError(f"{len(specs)} layers but {len(cands)} candidate "
                          "sets")
+    if respect_quarantine:
+        bad = quarantined_backends(graph_fingerprint(g), platform=platform,
+                                   cache_dir=cache_dir)
+        if bad:
+            cands = tuple(
+                tuple(c for c in cs if c[2] not in bad) or cs
+                for cs in cands)
     measured: List[Dict[LayerCandidate, float]] = []
     for s in specs:
         measured.append(cached_layer_costs(
@@ -279,10 +291,13 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
     class_scale = class_ratios(calibration) if use_calibration else {}
     if ratios:
         scale = float(np.median(ratios))
-    elif isinstance(calibration, dict) and calibration.get("global_ratio"):
-        scale = float(calibration["global_ratio"])
     else:
         scale = 1.0
+        if isinstance(calibration, dict):
+            try:
+                scale = float(calibration.get("global_ratio") or 1.0)
+            except (TypeError, ValueError):
+                pass    # malformed calibration.json degrades to uncalibrated
     sources = tuple("measured" if all(c in m for c in cs) else "model"
                     for m, cs in zip(measured, cands))
     return ForwardCostOracle(n=n, e=e, specs=specs, cands=cands,
@@ -525,19 +540,28 @@ def autotune_forward(g: Graph, specs: Sequence[LayerSpec], *,
     if not force:
         e = _cache_load(path).get(key)
         if e is not None:
-            obs.counter("exec.autotune.cache", result="hit").inc()
-            obs.instant("exec.forward.verdict", cat="exec",
-                        source=e["source"], us=e["us"], from_cache=True)
-            configs = tuple(tuple(c) for c in e["configs"])
-            scheds = tuple(
-                (lab, tuple(tuple(c) for c in cfgs))
-                for lab, cfgs in e.get("schedules", {}).items())
-            rec = ForwardAutotuneRecord(
-                key=key, configs=configs, us=e["us"], source=e["source"],
-                table=tuple((r[0], float(r[1])) for r in e.get("table", ())),
-                from_cache=True, schedules=scheds)
-            return (build_forward_plan(g, specs, configs, source=e["source"],
-                                       predicted_us=e["us"]), rec)
+            try:  # a corrupt entry is a miss (re-measure), never a crash
+                configs = tuple(tuple(c) for c in e["configs"])
+                scheds = tuple(
+                    (lab, tuple(tuple(c) for c in cfgs))
+                    for lab, cfgs in e.get("schedules", {}).items())
+                rec = ForwardAutotuneRecord(
+                    key=key, configs=configs, us=float(e["us"]),
+                    source=str(e["source"]),
+                    table=tuple((r[0], float(r[1]))
+                                for r in e.get("table", ())),
+                    from_cache=True, schedules=scheds)
+                plan = build_forward_plan(g, specs, configs,
+                                          source=rec.source,
+                                          predicted_us=rec.us)
+            except (KeyError, TypeError, ValueError,
+                    AttributeError, IndexError):
+                obs.counter("exec.autotune.cache", result="corrupt").inc()
+            else:
+                obs.counter("exec.autotune.cache", result="hit").inc()
+                obs.instant("exec.forward.verdict", cat="exec",
+                            source=rec.source, us=rec.us, from_cache=True)
+                return plan, rec
 
     # 1. per-layer greedy — warms the cache the DP reads
     greedy = []

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
+from ..chaos import inject as chaos
 from ..graph.structure import Graph
 from ..core.blocksparse import (BlockEll, build_blockell, transpose_graph,
                                 traffic_model)
@@ -118,6 +119,7 @@ def _jnp_blocks(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
 
 def _pallas_blocks(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
                    ) -> jax.Array:
+    chaos.fail_point("exec.pallas_launch")   # no-op unless a drill armed it
     n, d = x.shape
     bm, bk, R, C = meta.bm, meta.bk, meta.R, meta.C
     dp = -(-d // 128) * 128
@@ -135,12 +137,14 @@ def _pallas_blocks(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
         fb = (x * a["s_in"][:, None] * a["s_out"][:, None] if meta.add_diag
               else jnp.zeros_like(x))
         if y is None:
-            return fb
-        return jnp.where(a["node_active"][:, None], y[:n, :d], fb)
+            return chaos.mangle("exec.kernel_result", fb)
+        return chaos.mangle("exec.kernel_result",
+                            jnp.where(a["node_active"][:, None],
+                                      y[:n, :d], fb))
     y = spmm_blockell_fused(
         a["block_cols"], a["blocks"], xp, a["s_in2d"], a["s_out2d"],
         bm=bm, bk=bk, add_diag=meta.add_diag, interpret=meta.interpret)
-    return y[:n, :d]
+    return chaos.mangle("exec.kernel_result", y[:n, :d])
 
 
 # ---------------------------------------------------------------------------
@@ -447,6 +451,7 @@ def _pallas_layer(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array,
                   w_self: Optional[jax.Array] = None, self_coeff=None
                   ) -> jax.Array:
     """One fused layer launch: SpMM + (two-)W-update epilogue (+bias/ReLU)."""
+    chaos.fail_point("exec.pallas_launch")   # no-op unless a drill armed it
     n, d_in = x.shape
     d_out = w.shape[1]
     bm, bk, R, C = meta.bm, meta.bk, meta.R, meta.C
@@ -477,13 +482,15 @@ def _pallas_layer(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array,
         if relu:
             fb = jnp.maximum(fb, 0.0)
         if y is None:
-            return fb
-        return jnp.where(a["node_active"][:, None], y[:n, :d_out], fb)
+            return chaos.mangle("exec.kernel_result", fb)
+        return chaos.mangle("exec.kernel_result",
+                            jnp.where(a["node_active"][:, None],
+                                      y[:n, :d_out], fb))
     y = spmm_blockell_update(
         a["block_cols"], a["blocks"], xp, a["s_in2d"], a["s_out2d"], wp, bp,
         wsp, cf, bm=bm, bk=bk, add_diag=meta.add_diag, relu=relu,
         interpret=meta.interpret)
-    return y[:n, :d_out]
+    return chaos.mangle("exec.kernel_result", y[:n, :d_out])
 
 
 @dataclasses.dataclass

@@ -352,13 +352,18 @@ def class_ratios(table: Optional[dict]) -> Dict[str, float]:
     if not table:
         return {}
     classes = table.get("classes", table)
+    if not isinstance(classes, dict):
+        return {}
     out = {}
     for ckey, v in classes.items():
-        if isinstance(v, dict):
-            if "ratio" in v:
-                out[str(ckey)] = float(v["ratio"])
-        elif isinstance(v, (int, float)):
-            out[str(ckey)] = float(v)
+        try:
+            if isinstance(v, dict):
+                if "ratio" in v:
+                    out[str(ckey)] = float(v["ratio"])
+            elif isinstance(v, (int, float)):
+                out[str(ckey)] = float(v)
+        except (TypeError, ValueError):
+            continue    # one garbled row must not poison the whole table
     return out
 
 

@@ -3,6 +3,6 @@ micro-batching + oracle-checked request path (paper §IV-B2, online form)."""
 from .cache import EmbeddingCache, CacheStats
 from .batcher import (Request, MicroBatch, MicroBatcher, pow2_bucket,
                       zipfian_trace)
-from .engine import ServeEngine, ServeReport, RequestRecord
+from .engine import ServeEngine, ServeReport, RequestRecord, ServeSLO
 from .registry import (GNNSession, WideDeepSession, SESSION_BUILDERS,
                        make_session)

@@ -19,6 +19,21 @@ oracle check on every served request.  Latency bookkeeping combines the
 trace's simulated arrival/flush clock with measured compute wall-time
 (queueing backpressure between batches is not modeled).
 
+**SLO mode** (pass a :class:`ServeSLO`): the engine switches to a fully
+deterministic service model on the trace clock — batch completion times come
+from a modeled compute cost (``cost_per_batch_s`` + ``cost_per_miss_s`` per
+computed seed) chained through a ``busy_until`` backpressure clock, so
+overload actually backs the engine up, and every shed/degrade decision (and
+therefore every counter) is a pure function of the trace.  Each arrival is
+validated (malformed ids are *rejected*, never crash the engine) and
+admission-controlled: when the bounded queue is full or the modeled backlog
+would blow the request's deadline budget, the engine answers **degraded**
+from the final-layer cache with an explicit ``stale`` flag — or *sheds*
+explicitly when the cache cannot help.  Every response is exact or flagged;
+nothing times out silently.  Real wall-time per batch is still measured,
+but only into a gauge (``serve.batch_wall_ms``) so timing noise never
+touches the deterministic accounting.
+
 Latency state is a **streaming log-bucket histogram**
 (:class:`repro.obs.Histogram` — fixed bucket count, so memory stays bounded
 no matter how long the trace is), not a per-request list; the report's
@@ -43,12 +58,36 @@ from .cache import CacheStats, EmbeddingCache
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSLO:
+    """The serve-path service-level objective (and its deterministic cost
+    model).
+
+    ``deadline_s`` is the per-request latency budget: an arrival whose
+    modeled completion would exceed it is answered degraded (stale cache) or
+    shed, never left to time out.  ``max_queue`` bounds the pending queue
+    (admission control).  ``cost_per_batch_s``/``cost_per_miss_s`` are the
+    modeled compute cost of one flushed batch and of each cache-missing seed
+    it computes — charged on the trace clock through the engine's
+    ``busy_until``, so backpressure, shedding, and every counter are
+    deterministic functions of the trace (chaos drills replay them
+    bit-for-bit)."""
+
+    deadline_s: float = 0.05
+    max_queue: int = 256
+    cost_per_batch_s: float = 2e-3
+    cost_per_miss_s: float = 1e-4
+    degrade: bool = True          # answer stale from cache before shedding
+
+
+@dataclasses.dataclass(frozen=True)
 class RequestRecord:
     req_id: int
     node_id: int
     latency: float            # seconds: flush wait + batch compute
     t_done: float             # completion time on the trace clock
     oracle_err: float
+    outcome: str = "exact"    # "exact" | "degraded" | "shed" | "rejected"
+    stale: bool = False       # True only for degraded (cache-served) answers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +99,9 @@ class ServeReport:
     req_per_s: float
     max_oracle_err: float
     cache: Optional[CacheStats]
+    num_degraded: int = 0
+    num_shed: int = 0
+    num_rejected: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -71,13 +113,24 @@ class ServeEngine:
 
     def __init__(self, session, cache: Optional[EmbeddingCache] = None,
                  batcher: Optional[MicroBatcher] = None,
-                 oracle_check: bool = True, keep_records: bool = False):
+                 oracle_check: bool = True, keep_records: bool = False,
+                 slo: Optional[ServeSLO] = None):
         self.session = session
         self.cache = cache
         self.batcher = batcher or MicroBatcher()
         self.oracle_check = oracle_check
         self.keep_records = keep_records
         self.records: List[RequestRecord] = []   # only if keep_records
+        self.slo = slo
+        self.busy_until = 0.0        # modeled engine-free time (SLO mode)
+        self.num_degraded = 0
+        self.num_shed = 0
+        self.num_rejected = 0
+        self._last_computed = 0      # seeds the last _embed actually computed
+        # the id space arrivals are validated against (None: skip validation)
+        g = getattr(session, "g", None)
+        self.num_ids = (g.num_nodes if g is not None
+                        else getattr(session, "num_users", None))
         # bounded-memory latency state: a streaming histogram + running
         # clock extrema replace the old per-request latency list; ungated —
         # the report's percentiles must work with telemetry off (and the
@@ -159,6 +212,7 @@ class ServeEngine:
 
     def _embed(self, unique_ids: np.ndarray) -> np.ndarray:
         L = self.session.num_layers
+        self._last_computed = int(unique_ids.shape[0])
         if L == 0:
             # leaf-only session (recsys tower): the line cache IS the path
             if self.cache is not None:
@@ -174,6 +228,7 @@ class ServeEngine:
         else:
             mask = np.zeros(unique_ids.shape[0], bool)
         miss = unique_ids[~mask]
+        self._last_computed = int(miss.size)
         if miss.size:
             out[~mask] = self._compute(miss)
         return out
@@ -201,7 +256,17 @@ class ServeEngine:
                     errs = np.max(np.abs(emb - ref), axis=-1)
                     self.max_oracle_err = max(self.max_oracle_err,
                                               float(errs.max(initial=0.0)))
-            t_done = mb.t_flush + compute_dt
+            if self.slo is None:
+                t_done = mb.t_flush + compute_dt
+            else:
+                # modeled completion on the trace clock: deterministic cost
+                # chained through busy_until (real wall time goes to a gauge
+                # only, so timing noise never reaches the accounting)
+                cost = (self.slo.cost_per_batch_s
+                        + self.slo.cost_per_miss_s * self._last_computed)
+                t_done = max(mb.t_flush, self.busy_until) + cost
+                self.busy_until = t_done
+                obs.gauge("serve.batch_wall_ms").set(compute_dt * 1e3)
             for i, r in enumerate(mb.requests):
                 lat = t_done - r.t_arrival
                 self.lat_hist.observe(lat)
@@ -220,6 +285,70 @@ class ServeEngine:
             bsp.set(compute_ms=compute_dt * 1e3)
         return emb
 
+    # ------------------------------------------------- SLO degradation path
+    def _record_aside(self, req: Request, outcome: str, stale: bool = False,
+                      latency: float = 0.0) -> None:
+        obs.instant("serve.request", cat="serve", req_id=req.req_id,
+                    node_id=req.node_id, latency_ms=latency * 1e3,
+                    outcome=outcome)
+        if self.keep_records:
+            self.records.append(RequestRecord(
+                req_id=req.req_id, node_id=req.node_id, latency=latency,
+                t_done=req.t_arrival + latency, oracle_err=0.0,
+                outcome=outcome, stale=stale))
+
+    def _degraded_answer(self, req: Request) -> bool:
+        """Answer ``req`` from the final-layer cache, explicitly stale.
+
+        The staleness-flag contract: a degraded response carries whatever
+        embedding the cache last computed for the node — served immediately,
+        bypassing the queue — and is flagged ``stale=True`` so the client
+        knows it is not the freshly computed row.  Returns False (caller
+        must shed) when the cache holds nothing for the node."""
+        L = self.session.num_layers
+        if self.cache is None or L == 0:
+            return False
+        mask, _vals = self.cache.lookup(L, np.asarray([req.node_id]))
+        if not bool(mask[0]):
+            return False
+        self.num_degraded += 1
+        obs.counter("serve.degraded").inc()
+        self.lat_hist.observe(0.0)
+        self.num_requests += 1
+        self._t_first = min(self._t_first, req.t_arrival)
+        self._t_last = max(self._t_last, req.t_arrival)
+        self._record_aside(req, "degraded", stale=True)
+        return True
+
+    def _admit(self, req: Request) -> bool:
+        """SLO-mode admission: validate, budget, degrade-or-shed.
+
+        True means "enqueue normally"; False means the request was already
+        answered (degraded) or explicitly refused (rejected/shed)."""
+        slo, t = self.slo, req.t_arrival
+        if self.num_ids is not None and not (
+                0 <= int(req.node_id) < self.num_ids):
+            self.num_rejected += 1
+            obs.counter("serve.rejected", reason="malformed").inc()
+            self._record_aside(req, "rejected")
+            return False
+        # worst-case modeled completion if admitted: deadline-triggered
+        # flush, engine backlog, full-batch miss compute
+        est = (max(self.busy_until, t + self.batcher.max_wait)
+               + slo.cost_per_batch_s
+               + slo.cost_per_miss_s * min(len(self.batcher.pending) + 1,
+                                           self.batcher.max_batch))
+        full = len(self.batcher.pending) >= slo.max_queue
+        if not full and est - t <= slo.deadline_s:
+            return True
+        if slo.degrade and self._degraded_answer(req):
+            return False
+        self.num_shed += 1
+        obs.counter("serve.shed",
+                    reason="queue_full" if full else "deadline").inc()
+        self._record_aside(req, "shed")
+        return False
+
     def serve(self, requests: Sequence[Request]) -> ServeReport:
         """Run a whole trace through the batcher and report."""
         stream = sorted(requests, key=lambda r: r.t_arrival)
@@ -229,6 +358,8 @@ class ServeEngine:
                 mb = self.batcher.poll(due)
                 if mb is not None:
                     self.process_batch(mb)
+            if self.slo is not None and not self._admit(req):
+                continue
             mb = self.batcher.submit(req)
             if mb is not None:
                 self.process_batch(mb)
@@ -255,7 +386,9 @@ class ServeEngine:
             p50_ms=float(p50) * 1e3, p99_ms=float(p99) * 1e3,
             req_per_s=float(rate),
             max_oracle_err=self.max_oracle_err,
-            cache=stats)
+            cache=stats,
+            num_degraded=self.num_degraded, num_shed=self.num_shed,
+            num_rejected=self.num_rejected)
 
     def _export_metrics(self, p50: float, p99: float, rate: float,
                         stats: Optional[CacheStats]) -> None:

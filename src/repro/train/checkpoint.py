@@ -11,11 +11,14 @@ import json
 import os
 import queue
 import threading
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .. import obs
 
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
@@ -46,22 +49,21 @@ def save_checkpoint(ckpt_dir: str, step: int, params, opt_state,
     return path
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def available_steps(ckpt_dir: str):
+    """All checkpoint steps on disk, newest first."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = [int(f[5:13]) for f in os.listdir(ckpt_dir)
              if f.startswith("step_") and f.endswith(".npz")]
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
 
 
-def restore_checkpoint(ckpt_dir: str, params_template, opt_template,
-                       step: Optional[int] = None,
-                       shardings: Optional[Tuple] = None):
-    """Restore into the structure of the templates; device_put with the given
-    (params_sharding, opt_sharding) if provided (elastic re-shard)."""
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = available_steps(ckpt_dir)
+    return steps[0] if steps else None
+
+
+def _load_step(ckpt_dir, step, params_template, opt_template, shardings):
     data = np.load(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
 
     def rebuild(prefix, template, sh):
@@ -80,6 +82,41 @@ def restore_checkpoint(ckpt_dir: str, params_template, opt_template,
     p_sh, o_sh = shardings if shardings else (None, None)
     return (rebuild("params", params_template, p_sh),
             rebuild("opt", opt_template, o_sh), step)
+
+
+def restore_checkpoint(ckpt_dir: str, params_template, opt_template,
+                       step: Optional[int] = None,
+                       shardings: Optional[Tuple] = None):
+    """Restore into the structure of the templates; device_put with the given
+    (params_sharding, opt_sharding) if provided (elastic re-shard).
+
+    With ``step=None``, a corrupt/torn newest ``.npz`` (bad zip header,
+    garbled member, missing leaf) is *not* fatal: restore falls back to the
+    next older checkpoint, counting ``train.ckpt_fallback`` per skip.  The
+    atomic-rename publish makes torn files rare, but disk corruption and
+    chaos drills (``repro.chaos.corrupt_file``) still produce them.  An
+    explicit ``step`` means the caller wants exactly that checkpoint, so
+    load errors propagate.
+    """
+    if step is not None:
+        return _load_step(ckpt_dir, step, params_template, opt_template,
+                          shardings)
+    steps = available_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    last_err: Optional[Exception] = None
+    for s in steps:
+        try:
+            return _load_step(ckpt_dir, s, params_template, opt_template,
+                              shardings)
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            last_err = e
+            obs.counter("train.ckpt_fallback").inc()
+            obs.instant("train.ckpt_fallback", cat="train", step=s,
+                        error=type(e).__name__)
+    raise RuntimeError(
+        f"all {len(steps)} checkpoints in {ckpt_dir} unreadable"
+    ) from last_err
 
 
 def _gc_old(ckpt_dir: str, keep: int) -> None:

@@ -1,4 +1,4 @@
-"""Fault tolerance & elasticity (DESIGN.md §5, 1000+-node posture).
+"""Fault tolerance & elasticity (the ROADMAP's 1000+-node training posture).
 
 Mechanisms:
   * checkpoint/restart — resume() restores the latest atomic checkpoint
@@ -19,31 +19,39 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from collections import deque
+from typing import Callable, Deque, Optional
 
 import jax
 import numpy as np
 
+from .. import obs
 from .checkpoint import latest_step, restore_checkpoint
 
 
 @dataclasses.dataclass
 class StepWatchdog:
-    """Flags straggling steps: > ``threshold`` x rolling-median step time."""
+    """Flags straggling steps: > ``threshold`` x rolling-median step time.
+
+    Every flag counts ``train.straggler_flagged`` in :mod:`repro.obs` (on
+    real fleets the counter is what pages; here it is what drills assert)."""
 
     threshold: float = 3.0
     window: int = 32
-    history: List[float] = dataclasses.field(default_factory=list)
+    history: Deque[float] = dataclasses.field(default_factory=deque)
     flagged: int = 0
+
+    def __post_init__(self):
+        # deque(maxlen) drops the O(window) list.pop(0) shift per step
+        self.history = deque(self.history, maxlen=self.window)
 
     def observe(self, seconds: float) -> bool:
         self.history.append(seconds)
-        if len(self.history) > self.window:
-            self.history.pop(0)
         med = float(np.median(self.history))
         slow = len(self.history) >= 8 and seconds > self.threshold * med
         if slow:
             self.flagged += 1
+            obs.counter("train.straggler_flagged").inc()
         return slow
 
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
+from ..chaos import inject as chaos
 from .optimizer import Optimizer, apply_updates, clip_by_global_norm
 from .checkpoint import AsyncCheckpointer
 from .fault import StepWatchdog, resume
@@ -80,6 +81,7 @@ def fit(loss_fn: Callable, opt: Optimizer, params, batches: Iterator,
     t0 = time.time()
     i = start
     for i, batch in zip(range(start, steps), batches):
+        chaos.fail_point("train.step")   # crash-drill injection (no-op unarmed)
         with obs.span("train.step", cat="train", step=i) as sp:
             ts = time.time()
             params, opt_state, loss = step_fn(params, opt_state, batch)

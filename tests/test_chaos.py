@@ -1,0 +1,429 @@
+"""repro.chaos: deterministic fault injection + the graceful-degradation
+contracts behind every injection point (exec fallback/quarantine, serve SLO
+admission, dist halo fallback, train checkpoint fallback + crash resume)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.chaos import (Fault, FaultPlan, InjectedFault, armed, corrupt_file,
+                         inject)
+from repro.graph import DatasetSpec, synthesize
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    obs.reset()
+    obs.enable()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return synthesize(DatasetSpec("chaos", 128, 1000, 16, 4, community=0.9,
+                                  num_communities=4, seed=3))
+
+
+def _counter(name: str) -> float:
+    """Sum of all counter series whose full name starts with ``name``."""
+    return sum(v for k, v in obs.snapshot()["counters"].items()
+               if k == name or k.startswith(name + "{"))
+
+
+# ------------------------------------------------------------ fault plans
+def test_fault_plan_generate_deterministic():
+    spec = {"exec.pallas_launch": [("kernel_launch", 10)],
+            "train.step": [("crash", 50)],
+            "dist.halo": [("shard_loss", 4), ("straggler", 4)]}
+    a = FaultPlan.generate(7, spec)
+    b = FaultPlan.generate(7, spec)
+    assert a.describe() == b.describe()
+    assert len(a.faults) == 4
+    for f in a.faults:
+        assert 0 <= f.hit < dict(spec[f.site])[f.kind] or f.hit == 0
+
+
+def test_fault_plan_validates_kind_and_hit():
+    with pytest.raises(ValueError):
+        Fault("x", "not_a_kind")
+    with pytest.raises(ValueError):
+        Fault("x", "crash", hit=-1)
+
+
+def test_disarmed_hooks_are_noops():
+    assert inject.active() is None
+    assert inject.fire("exec.pallas_launch") is None
+    inject.fail_point("train.step")          # must not raise
+    x = np.ones(4, np.float32)
+    assert inject.mangle("exec.kernel_result", x) is x
+
+
+def test_armed_fires_at_hit_and_restores():
+    plan = FaultPlan.of(Fault("s", "crash", hit=2))
+    with armed(plan) as inj:
+        assert inject.fire("s") is None       # hit 0
+        assert inject.fire("s") is None       # hit 1
+        f = inject.fire("s")                  # hit 2 -> fires
+        assert f is not None and f.kind == "crash"
+        assert inject.fire("s") is None       # count=1: one-shot
+        assert inj.hits["s"] == 4 and len(inj.fired) == 1
+    assert inject.active() is None
+    assert _counter("chaos.fired") == 1
+
+
+def test_fail_point_raises_injected_fault():
+    with armed(FaultPlan.of(Fault("train.step", "crash", hit=0))):
+        with pytest.raises(InjectedFault) as ei:
+            inject.fail_point("train.step")
+    assert ei.value.fault.kind == "crash"
+
+
+def test_mangle_nan_backend():
+    with armed(FaultPlan.of(Fault("exec.kernel_result", "nan_backend"))):
+        y = inject.mangle("exec.kernel_result",
+                          np.ones((4, 4), np.float32))
+    assert np.isnan(y).any() and np.isfinite(np.ones((4, 4))).all()
+
+
+def test_corrupt_file_modes(tmp_path):
+    p = tmp_path / "blob.bin"
+    payload = bytes(range(256)) * 8
+    p.write_bytes(payload)
+    corrupt_file(str(p), seed=1, mode="garble")
+    assert p.read_bytes() != payload and p.stat().st_size == len(payload)
+    corrupt_file(str(p), seed=1, mode="truncate")
+    assert p.stat().st_size < len(payload)
+    with pytest.raises(ValueError):
+        corrupt_file(str(p), mode="shred")
+
+
+def test_adversarial_trace_deterministic_and_malformed():
+    from repro.chaos import adversarial_trace
+    a = adversarial_trace(64, 200, rate=1000.0, overload=8.0,
+                          malformed_fraction=0.1, seed=4)
+    b = adversarial_trace(64, 200, rate=1000.0, overload=8.0,
+                          malformed_fraction=0.1, seed=4)
+    assert [(r.node_id, r.t_arrival) for r in a] == \
+           [(r.node_id, r.t_arrival) for r in b]
+    bad = sum(1 for r in a if not 0 <= r.node_id < 64)
+    assert bad == 20
+    ts = [r.t_arrival for r in a]
+    assert ts == sorted(ts)
+
+
+# ------------------------------------------------------- exec degradation
+def test_resilient_plan_launch_fault_quarantines(small_graph, tmp_path):
+    from repro.exec import (ResilientPlan, build_plan, quarantined_backends,
+                            graph_fingerprint)
+    g = small_graph
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((g.num_nodes, 16)).astype(np.float32))
+    ref = np.asarray(build_plan(g, "gcn", backend="coo").apply(x))
+    rp = ResilientPlan(g, "gcn", backend="pallas", cache_dir=str(tmp_path))
+    with armed(FaultPlan.of(Fault("exec.pallas_launch", "kernel_launch"))):
+        y = np.asarray(rp.apply(x))
+    assert rp.verdict.degraded and rp.verdict.backend != "pallas"
+    assert np.allclose(y, ref, atol=1e-4)
+    assert "pallas" in quarantined_backends(graph_fingerprint(g),
+                                            cache_dir=str(tmp_path))
+    assert _counter("exec.fallback") >= 1
+    assert _counter("exec.quarantine") >= 1
+    # disarmed follow-up call is healthy and skips the quarantined engine
+    y2 = np.asarray(rp.apply(x))
+    assert not rp.verdict.degraded and np.allclose(y2, ref, atol=1e-4)
+    # a fresh plan on the same cache starts with pallas already excluded
+    rp3 = ResilientPlan(g, "gcn", backend="pallas", cache_dir=str(tmp_path))
+    assert "pallas" not in rp3.chain
+
+
+def test_resilient_plan_nan_fault_and_dp_avoidance(small_graph, tmp_path):
+    from repro.exec import (ResilientPlan, build_cost_oracle, build_plan,
+                            dp_schedule, gcn_chain)
+    g = small_graph
+    x = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((g.num_nodes, 16)).astype(np.float32))
+    ref = np.asarray(build_plan(g, "gcn", backend="coo").apply(x))
+    rp = ResilientPlan(g, "gcn", backend="pallas", cache_dir=str(tmp_path))
+    with armed(FaultPlan.of(Fault("exec.kernel_result", "nan_backend"))):
+        y = np.asarray(rp.apply(x))
+    assert np.isfinite(y).all() and np.allclose(y, ref, atol=1e-4)
+    assert any(r == "nonfinite_output" for _, r in rp.verdict.attempts)
+    # the DP drops the quarantined backend from every layer's candidates...
+    grid = [("aggregate_first", False, "coo", 128, True),
+            ("aggregate_first", True, "pallas", 128, True)]
+    oracle = build_cost_oracle(g, gcn_chain([16, 16, 4]), candidates=[grid],
+                               cache_dir=str(tmp_path), use_cache=False)
+    assert all(c[2] != "pallas" for cs in oracle.cands for c in cs)
+    _, sched = dp_schedule(oracle)
+    assert all(c[2] != "pallas" for c in sched)
+    # ...unless told not to
+    loose = build_cost_oracle(g, gcn_chain([16, 16, 4]), candidates=[grid],
+                              cache_dir=str(tmp_path), use_cache=False,
+                              respect_quarantine=False)
+    assert any(c[2] == "pallas" for cs in loose.cands for c in cs)
+
+
+def test_clear_quarantine(small_graph, tmp_path):
+    from repro.exec import (clear_quarantine, graph_fingerprint,
+                            quarantined_backends, record_quarantine)
+    fp = graph_fingerprint(small_graph)
+    record_quarantine(fp, "pallas", reason="test", cache_dir=str(tmp_path))
+    assert quarantined_backends(fp, cache_dir=str(tmp_path)) == {"pallas"}
+    assert clear_quarantine(fp, cache_dir=str(tmp_path)) == 1
+    assert quarantined_backends(fp, cache_dir=str(tmp_path)) == set()
+
+
+# --------------------------------------------------- corrupt cache entries
+def test_autotune_corrupt_entry_is_a_miss(small_graph, tmp_path):
+    from repro.exec import autotune
+    g = small_graph
+    rec = autotune(g, 16, "gcn", cache_dir=str(tmp_path), iters=1)
+    assert not rec.from_cache
+    rec2 = autotune(g, 16, "gcn", cache_dir=str(tmp_path), iters=1)
+    assert rec2.from_cache
+    # garble the cached verdict: the next read must re-measure, not crash
+    path = tmp_path / "autotune.json"
+    doc = json.loads(path.read_text())
+    doc[rec.key]["bm"] = {"not": "an int"}
+    path.write_text(json.dumps(doc))
+    before = _counter("exec.autotune.cache{result=corrupt}")
+    rec3 = autotune(g, 16, "gcn", cache_dir=str(tmp_path), iters=1)
+    assert not rec3.from_cache
+    assert _counter("exec.autotune.cache{result=corrupt}") == before + 1
+
+
+def test_cached_layer_costs_skips_corrupt_rows(small_graph, tmp_path):
+    from repro.exec import cached_layer_costs
+    from repro.exec.autotune import device_sig, graph_fingerprint
+    g = small_graph
+    prefix = (f"{graph_fingerprint(g)}:layer:16x8:gcn:r1b1:"
+              f"{device_sig()}:deadbeef")
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps({prefix: {
+        "table": [["rowmajor", True, "coo", 128, True, 12.5],
+                  ["rowmajor", True, "jnp", "garbage", True, 1.0],
+                  "not-a-row"],
+    }}))
+    costs = cached_layer_costs(g, 16, 8, "gcn", cache_dir=str(tmp_path))
+    assert costs == {("rowmajor", True, "coo", 128, True): 12.5}
+    assert _counter("exec.autotune.cache{result=corrupt}") == 2
+
+
+def test_malformed_calibration_degrades_not_crashes(small_graph, tmp_path):
+    from repro.exec import build_cost_oracle, dp_schedule, gcn_chain
+    from repro.obs.audit import class_ratios, load_calibration
+    from repro.exec.autotune import device_sig
+    sig = device_sig()
+    cal = tmp_path / "calibration.json"
+    for blob in ('this is not json{{',
+                 json.dumps(["wrong", "shape"]),
+                 json.dumps({sig: {"classes": "junk"}}),
+                 json.dumps({sig: {"classes": {"a": {"ratio": "bogus"},
+                                               "b": {"ratio": 2.0}},
+                                   "global_ratio": "nope"}})):
+        cal.write_text(blob)
+        oracle = build_cost_oracle(small_graph, gcn_chain([16, 16, 4]),
+                                   cache_dir=str(tmp_path), use_cache=False)
+        cost, sched = dp_schedule(oracle)
+        assert np.isfinite(cost) and len(sched) == 2
+    # the last blob: the one good row survives, the garbled ones drop out
+    assert class_ratios(load_calibration(sig, str(tmp_path))) == {"b": 2.0}
+
+
+def test_audit_tolerates_malformed_calibration(tmp_path):
+    from repro.obs.audit import load_calibration, save_calibration
+    cal = tmp_path / "calibration.json"
+    cal.write_text("***garbage***")
+    assert load_calibration("cpu", str(tmp_path)) is None
+    # the writer rebuilds the document instead of crashing on the junk
+    save_calibration({"device_sig": "cpu", "classes": {}}, str(tmp_path))
+    assert load_calibration("cpu", str(tmp_path)) == {"device_sig": "cpu",
+                                                      "classes": {}}
+
+
+# -------------------------------------------------------------- serve SLO
+def _serve_engine(g, slo, warm):
+    from repro.serve import (EmbeddingCache, MicroBatcher, ServeEngine,
+                             make_session)
+    sess = make_session("gcn", g=g, hidden=16, out_dim=8, seed=0)
+    cache = EmbeddingCache(sess.layer_dims, capacity_bytes=1 << 20,
+                           num_nodes=g.num_nodes)
+    eng = ServeEngine(sess, cache,
+                      MicroBatcher(max_batch=16, max_wait=1e-3,
+                                   max_queue=slo.max_queue),
+                      keep_records=True, slo=slo)
+    if warm:
+        eng.warm(np.arange(g.num_nodes))
+    return eng
+
+
+def test_serve_slo_rejects_degrades_and_meets_deadline(small_graph):
+    from repro.chaos import adversarial_trace
+    from repro.serve import ServeSLO
+    slo = ServeSLO(deadline_s=5e-3, max_queue=32)
+    eng = _serve_engine(small_graph, slo, warm=True)
+    trace = adversarial_trace(small_graph.num_nodes, 600, rate=6000.0,
+                              overload=10.0, malformed_fraction=0.05, seed=2)
+    rep = eng.serve(trace)
+    n_exact = sum(1 for r in eng.records if r.outcome == "exact")
+    assert (n_exact + rep.num_degraded + rep.num_shed + rep.num_rejected
+            == len(trace))
+    assert rep.num_rejected == 30            # 5% of 600, validated ids
+    assert rep.num_degraded > 0              # overload forced degradation
+    assert all(r.stale for r in eng.records if r.outcome == "degraded")
+    assert all(not r.stale for r in eng.records if r.outcome == "exact")
+    admitted = [r.latency for r in eng.records if r.outcome == "exact"]
+    assert max(admitted) <= slo.deadline_s + 1e-9
+    assert rep.max_oracle_err < 1e-3
+
+
+def test_serve_slo_sheds_when_degrade_off(small_graph):
+    from repro.chaos import adversarial_trace
+    from repro.serve import ServeSLO
+    slo = ServeSLO(deadline_s=5e-3, max_queue=32, degrade=False)
+    eng = _serve_engine(small_graph, slo, warm=False)   # cold: nothing stale
+    trace = adversarial_trace(small_graph.num_nodes, 400, rate=6000.0,
+                              overload=10.0, malformed_fraction=0.0, seed=5)
+    rep = eng.serve(trace)
+    assert rep.num_degraded == 0 and rep.num_shed > 0
+    assert _counter("serve.shed") == rep.num_shed
+
+
+def test_serve_without_slo_unchanged(small_graph):
+    from repro.serve import Request, ServeSLO
+    eng = _serve_engine(small_graph, ServeSLO(), warm=False)
+    eng.slo = None                              # pre-SLO behavior
+    reqs = [Request(req_id=i, node_id=i % small_graph.num_nodes,
+                    t_arrival=i * 1e-4) for i in range(40)]
+    rep = eng.serve(reqs)
+    assert rep.num_requests == 40
+    assert rep.num_degraded == rep.num_shed == rep.num_rejected == 0
+    assert rep.max_oracle_err < 1e-3
+
+
+def test_batcher_bounded_queue_sheds():
+    from repro.serve import MicroBatcher, Request
+    b = MicroBatcher(max_batch=64, max_wait=1.0, max_queue=2)
+    outs = [b.try_submit(Request(req_id=i, node_id=i, t_arrival=0.0))
+            for i in range(4)]
+    assert [ok for ok, _ in outs] == [True, True, False, False]
+    assert b.shed == 2
+    assert _counter("serve.shed") == 2
+
+
+# ------------------------------------------------------------------- dist
+def test_resilient_halo_fallback(small_graph):
+    from repro.dist import (allgather_aggregate, build_send_plan,
+                            resilient_halo_aggregate)
+    from repro.dist.gnn import pad_graph_nodes
+    from repro.graph import build_halo_plan
+    parts = jax.device_count()
+    g = pad_graph_nodes(small_graph, parts)
+    plan = build_halo_plan(g, parts)
+    send = build_send_plan(plan)
+    mesh = jax.make_mesh((parts,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(np.random.default_rng(6)
+                    .standard_normal((g.num_nodes, 8)).astype(np.float32))
+    local_n = g.num_nodes // parts
+    with mesh:
+        ref = np.asarray(allgather_aggregate(mesh, x, plan, local_n))
+        with armed(FaultPlan.of(Fault("dist.halo", "shard_loss"))):
+            y = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
+                                                    local_n))
+        y2 = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
+                                                 local_n))
+    assert np.allclose(y, ref, atol=1e-4)
+    assert np.allclose(y2, ref, atol=1e-4)
+    assert _counter("dist.halo_fallback{reason=shard_loss}") == 1
+
+
+# ------------------------------------------------------------------ train
+def test_watchdog_deque_bounded_and_counts():
+    from repro.train.fault import StepWatchdog
+    wd = StepWatchdog(threshold=3.0, window=16)
+    for _ in range(40):
+        wd.observe(0.01)
+    assert len(wd.history) == 16
+    assert wd.observe(1.0) is True
+    assert wd.flagged == 1
+    assert _counter("train.straggler_flagged") == 1
+
+
+def _ckpt_tree(v):
+    return {"w": jnp.full((3, 2), float(v), jnp.float32)}, \
+           {"m": jnp.full((3, 2), float(v) * 2, jnp.float32)}
+
+
+def test_restore_falls_back_past_corrupt_newest(tmp_path):
+    from repro.train.checkpoint import (available_steps, restore_checkpoint,
+                                        save_checkpoint)
+    d = str(tmp_path)
+    for s in (1, 2):
+        p, o = _ckpt_tree(s)
+        save_checkpoint(d, s, p, o)
+    assert available_steps(d) == [2, 1]
+    corrupt_file(os.path.join(d, "step_00000002.npz"), mode="truncate")
+    pt, ot = _ckpt_tree(0)
+    p, o, step = restore_checkpoint(d, pt, ot)
+    assert step == 1 and float(p["w"][0, 0]) == 1.0
+    assert _counter("train.ckpt_fallback") == 1
+    # explicit step: the caller asked for exactly that file -> it raises
+    with pytest.raises(Exception):
+        restore_checkpoint(d, pt, ot, step=2)
+    # every checkpoint corrupt -> RuntimeError, not a silent template
+    corrupt_file(os.path.join(d, "step_00000001.npz"), mode="truncate")
+    with pytest.raises(RuntimeError):
+        restore_checkpoint(d, pt, ot)
+
+
+def test_crash_resume_bit_identical(tmp_path):
+    from repro.train.loop import fit
+    from repro.train.optimizer import adam
+
+    def params0():
+        return {"w": jnp.zeros((4, 1), jnp.float32)}
+
+    w_true = np.random.default_rng(9).standard_normal((4, 1)) \
+        .astype(np.float32)
+
+    def batches(start):
+        i = start
+        while True:
+            r = np.random.default_rng(500 + i)
+            xb = r.standard_normal((8, 4)).astype(np.float32)
+            yield {"x": jnp.asarray(xb), "y": jnp.asarray(xb @ w_true)}
+            i += 1
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    ref = fit(loss_fn, adam(1e-2), params0(), batches(0), 6,
+              ckpt_dir=str(tmp_path / "ref"), ckpt_every=2, log_every=0,
+              log=lambda *a: None)
+    crash_dir = str(tmp_path / "crash")
+    with pytest.raises(InjectedFault):
+        with armed(FaultPlan.of(Fault("train.step", "crash", hit=5))):
+            fit(loss_fn, adam(1e-2), params0(), batches(0), 6,
+                ckpt_dir=crash_dir, ckpt_every=2, log_every=0,
+                log=lambda *a: None)
+    import time as _t
+    from repro.train.checkpoint import latest_step
+    for _ in range(250):
+        if latest_step(crash_dir) == 4:
+            break
+        _t.sleep(0.02)
+    assert latest_step(crash_dir) == 4
+    res = fit(loss_fn, adam(1e-2), params0(), batches(5), 6,
+              ckpt_dir=crash_dir, ckpt_every=2, log_every=0,
+              log=lambda *a: None)
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(res.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
