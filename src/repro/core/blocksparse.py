@@ -181,8 +181,6 @@ def build_blockell(g: Graph, bm: int = 128, bk: int = 128,
     mask (requires unit weights and no duplicate edges); ``"auto"`` picks the
     bitmask whenever it is exact.
     """
-    if storage not in ("dense", "bitmask", "auto"):
-        raise ValueError(f"unknown storage {storage!r}")
     valid = g.edge_mask if g.edge_mask is not None else np.ones(g.num_edges, bool)
     src = g.src[valid].astype(np.int64)
     dst = g.dst[valid].astype(np.int64)
@@ -190,8 +188,35 @@ def build_blockell(g: Graph, bm: int = 128, bk: int = 128,
          else np.ones(src.shape[0], np.float32))
     if dtype is None:
         dtype = w.dtype if g.edge_weight is not None else np.float32
-    n = g.num_nodes
-    R = int(np.ceil(n / bm))
+    return build_blockell_coo(src, dst, w, num_nodes=g.num_nodes, bm=bm,
+                              bk=bk, width=width, storage=storage,
+                              dtype=dtype)
+
+
+def build_blockell_coo(src: np.ndarray, dst: np.ndarray, w: np.ndarray, *,
+                       num_nodes: int, num_rows: Optional[int] = None,
+                       bm: int = 128, bk: int = 128,
+                       width: Optional[int] = None, storage: str = "dense",
+                       dtype: Optional[np.dtype] = None) -> BlockEll:
+    """:func:`build_blockell` over bare COO arrays, possibly RECTANGULAR.
+
+    ``num_rows`` decouples the destination-row count from the source-node
+    count: the degree-bucketed plans (repro.exec.bucketing) remap each
+    bucket's destination rows into a compact 0..n_b-1 space while sources
+    stay global, so each bucket's block-ELL is an (n_b x num_nodes) matrix
+    tiled at that bucket's own (bm, bk).  ``num_rows=None`` keeps the square
+    single-grid behavior.
+    """
+    if storage not in ("dense", "bitmask", "auto"):
+        raise ValueError(f"unknown storage {storage!r}")
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w)
+    if dtype is None:
+        dtype = np.float32
+    n = num_nodes
+    n_rows = num_rows if num_rows is not None else n
+    R = max(int(np.ceil(n_rows / bm)), 1)
     C = int(np.ceil(n / bk))
     rb, cb = dst // bm, src // bk
     key = rb * C + cb

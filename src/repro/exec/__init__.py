@@ -37,9 +37,23 @@ backend in aggregate-first order it folds the update matmul (+bias+ReLU)
 into the SpMM epilogue so the ``(n, d_in)`` aggregation never round-trips
 through HBM.  :func:`autotune_layer` tunes order, fusion, backend, and block
 shape as one joint space in the same fingerprinted disk cache.
+
+**Degree-binned multi-grid launch** (:mod:`repro.exec.bucketing`): on
+power-law graphs one global tile shape lets hub rows dominate the critical
+path.  ``build_plan(..., buckets="64@8+256")`` partitions destination nodes
+by in-degree at compile time, builds one rectangular block-ELL per bucket
+(bucket-local rows × global columns, per-bucket tile), launches one compact
+sub-grid per bucket, and stitches outputs through the inverse permutation —
+bit-identical to the monolithic plan when one bucket holds every node.
+Bucketed variants join the autotune candidate space automatically on
+degree-skewed graphs.
 """
 from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
                    build_layer_plan, choose_order, layer_order_costs)
+from .bucketing import (parse_bucket_sig, bucket_sig, assign_buckets,
+                        bucket_occupancy, default_scheme, bucket_candidates,
+                        bucket_layer_candidates, split_graph_cand,
+                        split_layer_cand, make_graph_cand, make_layer_cand)
 from .autotune import (autotune, autotune_plan, autotune_layer,
                        autotune_layer_plan, graph_fingerprint, device_sig,
                        AutotuneRecord, LayerAutotuneRecord,

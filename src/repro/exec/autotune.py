@@ -52,15 +52,62 @@ import jax.numpy as jnp
 from .. import obs
 from ..core.blocksparse import traffic_model
 from ..graph.structure import Graph
+from .bucketing import (bucket_candidates, bucket_layer_candidates,
+                        make_layer_cand, split_graph_cand, split_layer_cand)
 from .plan import (GraphExecutionPlan, LayerExecutionPlan, build_plan,
                    build_layer_plan, choose_order, layer_order_costs,
                    spmm_cost)
 
-Candidate = Tuple[str, int, bool]   # (backend, bm==bk, compact)
-# (order, fuse, backend, bm==bk, compact) — the joint layer space
+# (backend, bm==bk, compact) — degree-bucketed variants append a non-empty
+# bucket signature ("64@8+256", see repro.exec.bucketing) as a 4th element;
+# unbucketed candidates stay exact 3-tuples so cache keys never shift
+Candidate = Tuple[str, int, bool]
+# (order, fuse, backend, bm==bk, compact[, buckets]) — the joint layer space
 LayerCandidate = Tuple[str, bool, str, int, bool]
 
 _BYTES_PER_EL = 4
+
+# calibration-guided pruning (ISSUE 9 satellite): skip racing candidates
+# whose calibrated predicted cost exceeds PRUNE_ALPHA x the best calibrated
+# prediction — the bucketed search space is larger, the trial budget is not
+PRUNE_ALPHA = 4.0
+
+
+def _prune_candidates(cands: list, model_costs: dict, alpha: Optional[float],
+                      cache_dir: Optional[str]) -> list:
+    """Drop candidates the *calibrated* model predicts can't come close.
+
+    Only candidates whose calibration class carries a measured ratio
+    participate: unknown classes are always raced — the uncalibrated model
+    alone is exactly what the audit keeps catching misranking, so it never
+    gets to veto a candidate on its own.  No calibration table (or fewer
+    than two calibrated candidates) disables pruning entirely.
+    """
+    if alpha is None or len(cands) <= 1:
+        return cands
+    try:
+        from ..obs.audit import cand_class, class_ratios, load_calibration
+        ratios = class_ratios(load_calibration(device_sig(), cache_dir))
+    except Exception:
+        return cands
+    calibrated = {}
+    for c in cands:
+        r = ratios.get(cand_class(c))
+        if r is not None:
+            calibrated[c] = model_costs[c] * r
+    if len(calibrated) < 2:
+        return cands
+    best = min(calibrated.values())
+    kept = []
+    pruned = 0
+    for c in cands:
+        if c in calibrated and calibrated[c] > alpha * best:
+            pruned += 1
+            continue
+        kept.append(c)
+    if pruned:
+        obs.counter("exec.autotune.pruned").inc(pruned)
+    return kept
 
 
 # ------------------------------------------------- cold cost model (shared)
@@ -140,12 +187,13 @@ class AutotuneRecord:
     bm: int
     compact: bool
     us: float                      # winner's fwd+bwd microseconds
-    table: Tuple[Tuple[str, int, bool, float], ...]  # all measurements
-    from_cache: bool
+    table: Tuple[Tuple, ...]       # all measurements (bucketed rows carry
+    from_cache: bool               # their signature before ``us``)
+    buckets: str = ""              # winner's bucket signature ("" = single)
 
     def as_config(self) -> dict:
         return {"backend": self.backend, "bm": self.bm, "bk": self.bm,
-                "compact": self.compact}
+                "compact": self.compact, "buckets": self.buckets}
 
 
 # ------------------------------------------------------------------- cache
@@ -295,9 +343,13 @@ def cached_layer_costs(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
         for row in rows:
             # a corrupt row is skipped, never allowed to poison the DP
             try:
-                order, fuse, backend, bm, compact, us = row
-                cand = (str(order), bool(fuse), str(backend), int(bm),
-                        bool(compact))
+                if len(row) == 7:          # degree-bucketed layer trial
+                    order, fuse, backend, bm, compact, bsig, us = row
+                else:
+                    order, fuse, backend, bm, compact, us = row
+                    bsig = ""
+                cand = make_layer_cand(str(order), bool(fuse), str(backend),
+                                       int(bm), bool(compact), str(bsig))
                 us = float(us)
             except (TypeError, ValueError):
                 obs.counter("exec.autotune.cache", result="corrupt").inc()
@@ -345,12 +397,24 @@ def _time_fwd_bwd(plan: GraphExecutionPlan, x: jax.Array,
 def autotune(g: Graph, d: int, mode: str = "gcn", *,
              candidates: Optional[Sequence[Candidate]] = None,
              cache_dir: Optional[str] = None, force: bool = False,
-             iters: int = 3, seed: int = 0) -> AutotuneRecord:
-    """Measure the candidate grid on ``g`` and return the winner (cached)."""
+             iters: int = 3, seed: int = 0, prune: bool = True,
+             prune_alpha: float = PRUNE_ALPHA) -> AutotuneRecord:
+    """Measure the candidate grid on ``g`` and return the winner (cached).
+
+    With ``candidates=None`` the platform defaults are extended by
+    degree-bucketed variants when the graph's degree distribution warrants
+    them (:func:`repro.exec.bucketing.bucket_candidates`).  ``prune``
+    (opt-out) skips candidates whose calibration-scaled model cost exceeds
+    ``prune_alpha`` x the best calibrated candidate; see
+    :func:`_prune_candidates` for the safety rules."""
     platform = jax.default_backend()
-    cands = list(candidates or default_candidates(platform))
+    if candidates is not None:
+        cands = list(candidates)
+    else:
+        cands = default_candidates(platform) + bucket_candidates(g, platform)
     # the candidate set is part of the key: a cached verdict must never
-    # hand back a config the caller explicitly excluded
+    # hand back a config the caller explicitly excluded.  (Pruning happens
+    # after keying — the key reflects what the caller ASKED to race.)
     cand_sig = hashlib.sha1(repr(sorted(cands)).encode()).hexdigest()[:8]
     key = f"{graph_fingerprint(g)}:{d}:{mode}:{device_sig(platform)}:{cand_sig}"
     path = _cache_path(cache_dir)
@@ -362,7 +426,7 @@ def autotune(g: Graph, d: int, mode: str = "gcn", *,
                 key=key, backend=str(e["backend"]), bm=int(e["bm"]),
                 compact=bool(e["compact"]), us=float(e["us"]),
                 table=tuple(tuple(r) for r in e.get("table", ())),
-                from_cache=True)
+                from_cache=True, buckets=str(e.get("buckets", "")))
         except (KeyError, TypeError, ValueError, AttributeError):
             obs.counter("exec.autotune.cache", result="corrupt").inc()
         else:
@@ -374,40 +438,46 @@ def autotune(g: Graph, d: int, mode: str = "gcn", *,
                     .standard_normal((g.num_nodes, d)).astype(np.float32))
     n_nodes, n_edges = g.num_nodes, g.num_valid_edges
     model_cost = model_graph_cost(n_nodes, n_edges, d)
-    table: List[Tuple[str, int, bool, float]] = []
-    best: Optional[Tuple[float, Candidate]] = None
-    for backend, bm, compact in cands:
+    race = _prune_candidates(cands, {c: model_cost for c in cands},
+                             prune_alpha if prune else None, cache_dir)
+    table: List[Tuple] = []
+    best = None
+    for cand in race:
+        backend, bm, compact, bsig = split_graph_cand(cand)
         with obs.span("exec.autotune.trial", cat="exec", backend=backend,
-                      bm=bm, compact=compact, d=d, mode=mode, n=n_nodes,
-                      e=n_edges, model_cost=model_cost) as sp:
+                      bm=bm, compact=compact, buckets=bsig, d=d, mode=mode,
+                      n=n_nodes, e=n_edges, model_cost=model_cost) as sp:
             try:
                 plan = build_plan(g, mode, bm=bm, bk=bm, backend=backend,
-                                  compact=compact)
+                                  compact=compact, buckets=bsig)
                 us = _time_fwd_bwd(plan, x, iters=iters)
             except Exception:  # a candidate failing to build/run just loses
                 sp.set(failed=True)
                 continue
             sp.set(us=us, **_modeled_traffic(plan, d))
         obs.counter("exec.autotune.trials").inc()
-        table.append((backend, bm, compact, us))
+        table.append((backend, bm, compact, bsig, us) if bsig
+                     else (backend, bm, compact, us))
         if best is None or us < best[0]:
-            best = (us, (backend, bm, compact))
+            best = (us, (backend, bm, compact, bsig))
     if best is None:
         raise RuntimeError("autotune: every candidate failed "
-                           f"(tried {cands})")
-    us, (backend, bm, compact) = best
+                           f"(tried {race})")
+    us, (backend, bm, compact, bsig) = best
     try:
         # geometry + device_sig ride along so repro.obs.audit can re-model
         # every table row offline and key the calibration per device
         _cache_put(path, key, {"backend": backend, "bm": bm,
-                               "compact": compact, "us": us, "table": table,
+                               "compact": compact, "buckets": bsig,
+                               "us": us, "table": table,
                                "n": n_nodes, "e": n_edges, "d": d,
                                "mode": mode,
                                "device_sig": device_sig(platform)})
     except OSError:
         pass                  # read-only FS: tuning still works, just uncached
     return AutotuneRecord(key=key, backend=backend, bm=bm, compact=compact,
-                          us=us, table=tuple(table), from_cache=False)
+                          us=us, table=tuple(table), from_cache=False,
+                          buckets=bsig)
 
 
 def autotune_plan(g: Graph, d: int, mode: str = "gcn", *,
@@ -418,7 +488,7 @@ def autotune_plan(g: Graph, d: int, mode: str = "gcn", *,
     rec = autotune(g, d, mode, candidates=candidates, cache_dir=cache_dir,
                    force=force, iters=iters)
     plan = build_plan(g, mode, bm=rec.bm, bk=rec.bm, backend=rec.backend,
-                      compact=rec.compact)
+                      compact=rec.compact, buckets=rec.buckets)
     return plan, rec
 
 
@@ -462,8 +532,9 @@ class LayerAutotuneRecord:
     compact: bool
     us: float                      # winner's fwd+bwd microseconds
     model_order: str               # what the FLOP/byte model predicted
-    table: Tuple[Tuple[str, bool, str, int, bool, float], ...]
+    table: Tuple[Tuple, ...]       # bucketed rows carry their sig before us
     from_cache: bool
+    buckets: str = ""              # winner's bucket signature ("" = single)
 
     @property
     def order_agrees_with_model(self) -> bool:
@@ -472,7 +543,7 @@ class LayerAutotuneRecord:
     def as_config(self) -> dict:
         return {"order": self.order, "fuse": self.fuse,
                 "backend": self.backend, "bm": self.bm, "bk": self.bm,
-                "compact": self.compact}
+                "compact": self.compact, "buckets": self.buckets}
 
 
 def _time_layer_fwd_bwd(lp: LayerExecutionPlan, x: jax.Array, w: jax.Array,
@@ -506,15 +577,22 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
                    relu: bool = True, bias: bool = True,
                    candidates: Optional[Sequence[LayerCandidate]] = None,
                    cache_dir: Optional[str] = None, force: bool = False,
-                   iters: int = 3, seed: int = 0,
+                   iters: int = 3, seed: int = 0, prune: bool = True,
+                   prune_alpha: float = PRUNE_ALPHA,
                    _gplan_cache: Optional[Dict] = None) -> LayerAutotuneRecord:
     """Measure the joint layer space on ``g`` and return the winner (cached).
 
     Shares the graph-plan autotune's fingerprinted disk cache; keys carry the
-    layer shape, mode, epilogue flags, platform, and candidate signature."""
+    layer shape, mode, epilogue flags, platform, and candidate signature.
+    ``candidates=None`` extends the platform defaults with degree-bucketed
+    variants on skewed graphs; ``prune`` (opt-out) applies the
+    calibration-guided candidate skip (:func:`_prune_candidates`)."""
     platform = jax.default_backend()
-    cands = list(candidates
-                 or default_layer_candidates(platform, d_in, d_out))
+    if candidates is not None:
+        cands = list(candidates)
+    else:
+        cands = (default_layer_candidates(platform, d_in, d_out)
+                 + bucket_layer_candidates(g, platform, d_in, d_out))
     cand_sig = hashlib.sha1(repr(sorted(cands)).encode()).hexdigest()[:8]
     model_order = choose_order(g.num_nodes, g.num_valid_edges, d_in, d_out)
     key = (f"{graph_fingerprint(g)}:layer:{d_in}x{d_out}:{mode}:"
@@ -530,7 +608,7 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
                 compact=bool(e["compact"]), us=float(e["us"]),
                 model_order=str(e.get("model_order", model_order)),
                 table=tuple(tuple(r) for r in e.get("table", ())),
-                from_cache=True)
+                from_cache=True, buckets=str(e.get("buckets", "")))
         except (KeyError, TypeError, ValueError, AttributeError):
             obs.counter("exec.autotune.cache", result="corrupt").inc()
         else:
@@ -545,25 +623,28 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
                     .astype(np.float32))
     b = jnp.asarray(rng.standard_normal(d_out).astype(np.float32)) \
         if bias else None
-    gplans: Dict[Tuple[str, int, bool], GraphExecutionPlan] = (
+    gplans: Dict[Tuple, GraphExecutionPlan] = (
         {} if _gplan_cache is None else _gplan_cache)
     n_nodes, n_edges = g.num_nodes, g.num_valid_edges
-    table: List[Tuple[str, bool, str, int, bool, float]] = []
+    model_costs = {c: model_layer_cost_dims(n_nodes, n_edges, d_in, d_out, c)
+                   for c in cands}
+    race = _prune_candidates(cands, model_costs,
+                             prune_alpha if prune else None, cache_dir)
+    table: List[Tuple] = []
     best = None
-    for order, fuse, backend, bm, compact in cands:
-        cand = (order, fuse, backend, bm, compact)
+    for cand in race:
+        order, fuse, backend, bm, compact, bsig = split_layer_cand(cand)
         with obs.span("exec.autotune.trial", cat="exec", backend=backend,
                       bm=bm, compact=compact, order=order, fuse=fuse,
-                      d_in=d_in, d_out=d_out, mode=mode, n=n_nodes,
-                      e=n_edges,
-                      model_cost=model_layer_cost_dims(
-                          n_nodes, n_edges, d_in, d_out, cand)) as sp:
+                      buckets=bsig, d_in=d_in, d_out=d_out, mode=mode,
+                      n=n_nodes, e=n_edges,
+                      model_cost=model_costs[cand]) as sp:
             try:
-                gkey = (backend, bm, compact)
+                gkey = (backend, bm, compact, bsig)
                 if gkey not in gplans:
                     gplans[gkey] = build_plan(g, mode, bm=bm, bk=bm,
                                               backend=backend,
-                                              compact=compact)
+                                              compact=compact, buckets=bsig)
                 lp = build_layer_plan(g, mode, d_in=d_in, d_out=d_out,
                                       order=order, fuse=fuse,
                                       gplan=gplans[gkey])
@@ -573,13 +654,14 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
                 continue
             sp.set(us=us, **_modeled_traffic(gplans[gkey], d_out))
         obs.counter("exec.autotune.trials").inc()
-        table.append((order, fuse, backend, bm, compact, us))
+        table.append((order, fuse, backend, bm, compact, bsig, us) if bsig
+                     else (order, fuse, backend, bm, compact, us))
         if best is None or us < best[0]:
-            best = (us, (order, fuse, backend, bm, compact))
+            best = (us, (order, fuse, backend, bm, compact, bsig))
     if best is None:
         raise RuntimeError("autotune_layer: every candidate failed "
-                           f"(tried {cands})")
-    us, (order, fuse, backend, bm, compact) = best
+                           f"(tried {race})")
+    us, (order, fuse, backend, bm, compact, bsig) = best
     if order != model_order:
         # hysteresis toward the analytic prior: the measurement overrules
         # the FLOP/byte model only when it is decisively (>10%) better —
@@ -588,12 +670,15 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
         if contenders:
             alt = min(contenders, key=lambda r: r[-1])
             if alt[-1] <= us * 1.10:
-                order, fuse, backend, bm, compact, us = alt
+                us = alt[-1]
+                order, fuse, backend, bm, compact, bsig = \
+                    split_layer_cand(alt[:-1])
     try:
         # geometry + device_sig ride along for repro.obs.audit (see above)
         _cache_put(path, key, {"order": order, "fuse": fuse,
                                "backend": backend, "bm": bm,
-                               "compact": compact, "us": us,
+                               "compact": compact, "buckets": bsig,
+                               "us": us,
                                "model_order": model_order, "table": table,
                                "n": n_nodes, "e": n_edges, "d_in": d_in,
                                "d_out": d_out, "mode": mode,
@@ -603,7 +688,8 @@ def autotune_layer(g: Graph, d_in: int, d_out: int, mode: str = "gcn", *,
     return LayerAutotuneRecord(key=key, order=order, fuse=fuse,
                                backend=backend, bm=bm, compact=compact,
                                us=us, model_order=model_order,
-                               table=tuple(table), from_cache=False)
+                               table=tuple(table), from_cache=False,
+                               buckets=bsig)
 
 
 def autotune_layer_plan(g: Graph, d_in: int, d_out: int, mode: str = "gcn",
@@ -616,22 +702,23 @@ def autotune_layer_plan(g: Graph, d_in: int, d_out: int, mode: str = "gcn",
     """Autotune the joint space, then build the winning layer plan.
 
     Pass ``gplan`` to reuse an existing graph plan when it already matches
-    the winning (mode, backend, bm, compact); graph plans built during an
-    uncached tuning run are reused too — the winner is never reconstructed
-    from scratch."""
-    built: Dict[Tuple[str, int, bool], GraphExecutionPlan] = {}
+    the winning (mode, backend, bm, compact, buckets); graph plans built
+    during an uncached tuning run are reused too — the winner is never
+    reconstructed from scratch."""
+    built: Dict[Tuple, GraphExecutionPlan] = {}
     rec = autotune_layer(g, d_in, d_out, mode, relu=relu, bias=bias,
                          candidates=candidates, cache_dir=cache_dir,
                          force=force, iters=iters, _gplan_cache=built)
-    win = (rec.backend, rec.bm, rec.compact)
+    win = (rec.backend, rec.bm, rec.compact, rec.buckets)
     if gplan is not None and (
             gplan.mode != mode
-            or (gplan.backend, gplan.bm, gplan.compact) != win):
+            or (gplan.backend, gplan.bm, gplan.compact,
+                gplan.buckets) != win):
         gplan = None
     if gplan is None:
         gplan = built.get(win)
     lp = build_layer_plan(g, mode, d_in=d_in, d_out=d_out, order=rec.order,
                           fuse=rec.fuse, bm=rec.bm, bk=rec.bm,
                           backend=rec.backend, compact=rec.compact,
-                          gplan=gplan)
+                          gplan=gplan, buckets=rec.buckets)
     return lp, rec

@@ -58,6 +58,8 @@ from .autotune import (LayerCandidate, autotune_layer, cached_layer_costs,
                        graph_fingerprint, model_layer_cost_dims,
                        quarantined_backends,
                        _cache_path, _cache_load, _cache_put)
+from .bucketing import (bucket_layer_candidates, make_layer_cand,
+                        split_layer_cand)
 from ..obs.audit import cand_class, class_ratios, load_calibration
 
 SELF_KINDS = ("none", "two_w", "self_coeff")
@@ -169,7 +171,7 @@ def residual_edge_cost(n: int, d_boundary: int,
     choice forces at this boundary: aggregate-first *unfused* saves its own
     ``agg`` — a fresh ``(n, d_boundary)`` write + read — while the x-residual
     forms reuse the activation the previous layer already saved."""
-    order, fuse, _backend, _bm, _compact = cand_next
+    order, fuse = cand_next[0], cand_next[1]
     if order == "aggregate_first" and not fuse:
         return 2.0 * n * d_boundary * _BYTES_PER_EL
     return 0.0
@@ -178,8 +180,11 @@ def residual_edge_cost(n: int, d_boundary: int,
 def plan_switch_cost(e: int, cand_a: LayerCandidate,
                      cand_b: LayerCandidate) -> float:
     """Tie-break prior toward sharing one block-ELL construction across
-    adjacent layers: a (backend, bm, compact) switch builds and holds a
-    second plan (amortized construction traffic, not hot-path bytes)."""
+    adjacent layers: a (backend, bm, compact[, buckets]) switch builds and
+    holds a second plan (amortized construction traffic, not hot-path
+    bytes).  ``cand[2:]`` compares exactly that suffix for both the 5- and
+    6-element candidate forms — a bucketed and an unbucketed plan never
+    share, whatever their tiles."""
     if cand_a[2:] == cand_b[2:]:
         return 0.0
     return 3.0 * e * _BYTES_PER_EL / _SWITCH_AMORTIZE
@@ -256,7 +261,9 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
     specs = tuple(specs)
     if candidates is None:
         cands = tuple(tuple(default_layer_candidates(platform, s.d_in,
-                                                     s.d_out))
+                                                     s.d_out)
+                            + bucket_layer_candidates(g, platform, s.d_in,
+                                                      s.d_out))
                       for s in specs)
     else:
         cands = tuple(tuple(c) for c in candidates)
@@ -414,9 +421,10 @@ def build_forward_plan(g: Graph, specs: Sequence[LayerSpec],
                        _gplan_cache: Optional[Dict] = None
                        ) -> ForwardExecutionPlan:
     """Materialize a schedule: build each layer plan, sharing one
-    :class:`GraphExecutionPlan` per distinct ``(mode, backend, bm, compact)``
-    (pass ``_gplan_cache`` to extend the sharing across several builds of
-    the same graph — e.g. the schedules ``autotune_forward`` races)."""
+    :class:`GraphExecutionPlan` per distinct
+    ``(mode, backend, bm, compact, buckets)`` (pass ``_gplan_cache`` to
+    extend the sharing across several builds of the same graph — e.g. the
+    schedules ``autotune_forward`` races)."""
     specs = tuple(specs)
     configs = tuple(tuple(c) for c in configs)
     if len(configs) != len(specs):
@@ -424,12 +432,13 @@ def build_forward_plan(g: Graph, specs: Sequence[LayerSpec],
     gplans: Dict[Tuple, GraphExecutionPlan] = (
         {} if _gplan_cache is None else _gplan_cache)
     layers = []
-    for s, (order, fuse, backend, bm, compact) in zip(specs, configs):
-        gkey = (s.mode, backend, bm, compact)
+    for s, cfg in zip(specs, configs):
+        order, fuse, backend, bm, compact, bsig = split_layer_cand(cfg)
+        gkey = (s.mode, backend, bm, compact, bsig)
         if gkey not in gplans:
             gplans[gkey] = build_plan(g, s.mode, bm=bm, bk=bm,
                                       backend=backend, compact=compact,
-                                      interpret=interpret)
+                                      interpret=interpret, buckets=bsig)
         layers.append(build_layer_plan(g, s.mode, d_in=s.d_in, d_out=s.d_out,
                                        order=order, fuse=fuse,
                                        gplan=gplans[gkey]))
@@ -525,7 +534,9 @@ def autotune_forward(g: Graph, specs: Sequence[LayerSpec], *,
         raise ValueError("empty layer chain")
     if candidates is None:
         cand_sets = tuple(tuple(default_layer_candidates(
-            platform, s.d_in, s.d_out)) for s in specs)
+            platform, s.d_in, s.d_out)
+            + bucket_layer_candidates(g, platform, s.d_in, s.d_out))
+            for s in specs)
     else:
         cand_sets = tuple(tuple(c) for c in candidates)
         if len(cand_sets) == 1 and len(specs) > 1:
@@ -569,8 +580,9 @@ def autotune_forward(g: Graph, specs: Sequence[LayerSpec], *,
         rec_l = autotune_layer(g, s.d_in, s.d_out, s.mode, relu=s.relu,
                                bias=s.bias, candidates=cands,
                                cache_dir=cache_dir, iters=iters, seed=seed)
-        greedy.append((rec_l.order, rec_l.fuse, rec_l.backend, rec_l.bm,
-                       rec_l.compact))
+        greedy.append(make_layer_cand(rec_l.order, rec_l.fuse, rec_l.backend,
+                                      rec_l.bm, rec_l.compact,
+                                      rec_l.buckets))
 
     # 2. candidate schedules
     schedules: Dict[str, Tuple[LayerCandidate, ...]] = {

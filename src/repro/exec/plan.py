@@ -46,12 +46,13 @@ import jax.numpy as jnp
 from .. import obs
 from ..chaos import inject as chaos
 from ..graph.structure import Graph
-from ..core.blocksparse import (BlockEll, build_blockell, transpose_graph,
-                                traffic_model)
+from ..core.blocksparse import (BlockEll, build_blockell, build_blockell_coo,
+                                transpose_graph, traffic_model)
 from ..kernels.spmm_blockell import (spmm_blockell_fused,
                                      spmm_blockell_compact,
                                      spmm_blockell_update,
                                      spmm_blockell_update_compact)
+from .bucketing import assign_buckets, bucket_occupancy, parse_bucket_sig
 
 MODES = ("gcn", "sum", "mean")
 BACKENDS = ("pallas", "jnp", "coo")
@@ -72,11 +73,40 @@ class SideMeta(NamedTuple):
     interpret: bool
 
 
+class BucketMeta(NamedTuple):
+    """Static geometry of ONE degree bucket's rectangular block-ELL."""
+    bm: int
+    bk: int
+    R: int            # ceil(n_rows / bm)  (bucket-local destination blocks)
+    C: int            # ceil(n / bk)       (global source blocks)
+    W: int            # ELL width of this bucket
+    n_active: int
+    n_rows: int       # nodes assigned to this bucket
+
+
+class BucketedSideMeta(NamedTuple):
+    """Trace-time facts for one direction of a degree-bucketed plan.
+
+    Forward and backward carry INDEPENDENT bucket tuples: the transpose
+    graph is re-bucketed by its own in-degrees (= the original graph's
+    out-degrees), so each direction's hubs get their own sub-grid — the
+    per-bucket transpose plans of ISSUE 9.
+    """
+    backend: str
+    compact: bool
+    add_diag: bool
+    n: int            # num_nodes
+    interpret: bool
+    buckets: tuple    # Tuple[BucketMeta, ...]
+
+
 # ---------------------------------------------------------------------------
 # one direction of the fused op, on any backend
 # ---------------------------------------------------------------------------
-def _run_side(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
+def _run_side(meta, a: Dict[str, jax.Array], x: jax.Array
               ) -> jax.Array:
+    if isinstance(meta, BucketedSideMeta):
+        return _run_bucketed(meta, a, x)
     if meta.backend == "coo":
         y = jax.ops.segment_sum(x[a["src"]] * a["w"][:, None], a["dst"],
                                 num_segments=meta.n)
@@ -148,6 +178,77 @@ def _pallas_blocks(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array
 
 
 # ---------------------------------------------------------------------------
+# degree-bucketed multi-grid execution (ISSUE 9)
+# ---------------------------------------------------------------------------
+def _jnp_bucket(bmeta: BucketMeta, ab: Dict[str, jax.Array], xs: jax.Array,
+                add_diag: bool) -> jax.Array:
+    """One bucket of the jnp path: a per-bucket PADDED dense-tile einsum.
+
+    ``xs = s_in ⊙ x`` (global).  The per-bucket widths keep the padded grid
+    small (hub slots never inflate the tail bucket's W), and the einsum form
+    avoids the segment-sum scatter that made the single-grid compact jnp
+    path lose to padded on Cora (the PR 3 anomaly)."""
+    n, d = xs.shape
+    bm, bk, C, R = bmeta.bm, bmeta.bk, bmeta.C, bmeta.R
+    xb = jnp.pad(xs, ((0, C * bk - n), (0, 0))).reshape(C, bk, d)
+    cols = ab["block_cols"]
+    tiles = xb[jnp.maximum(cols, 0)]                       # (R, W, bk, d)
+    tiles = jnp.where((cols >= 0)[:, :, None, None], tiles, 0.0)
+    y = jnp.einsum("rwmk,rwkd->rmd", ab["blocks"], tiles)
+    y = y.reshape(R * bm, d)[:bmeta.n_rows]
+    if add_diag:
+        y = y + xs[ab["idx"]]
+    return y * ab["s_out_sel"][:, None]
+
+
+def _pallas_bucket(meta: BucketedSideMeta, bmeta: BucketMeta,
+                   ab: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """One bucket of the pallas path: a compact sub-grid at this bucket's
+    tile, with the self-term operands gathered into bucket-local row order
+    (``x_diag`` / ``s_in_diag``) so a single identity bucket is bit-identical
+    to the unbucketed compact kernel."""
+    n, d = x.shape
+    bm, bk, R, C = bmeta.bm, bmeta.bk, bmeta.R, bmeta.C
+    if bmeta.n_active == 0:
+        # no active slots: every row of this bucket takes the global
+        # diagonal fallback (node_active is False for all of them)
+        return jnp.zeros((bmeta.n_rows, d), x.dtype)
+    dp = _pad128(d)
+    xp = jnp.pad(x, ((0, C * bk - n), (0, dp - d)))
+    xd = sind = None
+    if meta.add_diag:
+        xd = jnp.pad(x[ab["idx"]],
+                     ((0, R * bm - bmeta.n_rows), (0, dp - d)))
+        sind = ab["s_in_diag2d"]
+    y = spmm_blockell_compact(
+        ab["rows"], ab["cols"], ab["blocks"], xp, ab["s_in2d"],
+        ab["s_out2d"], xd, sind, bm=bm, bk=bk, n_row_blocks=R,
+        add_diag=meta.add_diag, interpret=meta.interpret)
+    return y[:bmeta.n_rows, :d]
+
+
+def _run_bucketed(meta: BucketedSideMeta, a: Dict[str, jax.Array],
+                  x: jax.Array) -> jax.Array:
+    """Multi-grid aggregation: one launch per degree bucket, outputs stitched
+    back to original node order through the precomputed inverse permutation."""
+    n, d = x.shape
+    if meta.backend == "jnp":
+        xs = x * a["s_in"][:, None]
+        outs = [_jnp_bucket(bmeta, ab, xs, meta.add_diag)
+                for bmeta, ab in zip(meta.buckets, a["buckets"])
+                if bmeta.n_rows]
+        return jnp.concatenate(outs, axis=0)[a["inv_perm"]]
+    chaos.fail_point("exec.pallas_launch")   # no-op unless a drill armed it
+    outs = [_pallas_bucket(meta, bmeta, ab, x)
+            for bmeta, ab in zip(meta.buckets, a["buckets"]) if bmeta.n_rows]
+    y = jnp.concatenate(outs, axis=0)[a["inv_perm"]]
+    fb = (x * a["s_in"][:, None] * a["s_out"][:, None] if meta.add_diag
+          else jnp.zeros_like(x))
+    return chaos.mangle("exec.kernel_result",
+                        jnp.where(a["node_active"][:, None], y, fb))
+
+
+# ---------------------------------------------------------------------------
 # the plan container
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -178,6 +279,9 @@ class GraphExecutionPlan:
     _storage: str = "auto"
     _width: Optional[int] = None
     _fn: Optional[Callable] = dataclasses.field(default=None, repr=False)
+    buckets: str = ""                 # bucket signature, "" = single grid
+    _plan_bytes: int = 0              # bucketed: total per-bucket tile bytes
+    _occupancy: list = dataclasses.field(default_factory=list, repr=False)
 
     @property
     def ell(self) -> BlockEll:
@@ -231,12 +335,21 @@ class GraphExecutionPlan:
     # ------------------------------------------------------------ geometry
     @property
     def n_active(self) -> int:
+        if self.buckets:
+            return sum(m.n_active for m in self.meta_fwd.buckets)
         return self.ell.n_active
 
     @property
     def grid_size(self) -> int:
         """Accumulation steps one forward launch performs: ``n_active`` for
-        the compacted grid, ``R * W`` for the padded one, nnz for coo."""
+        the compacted grid, ``R * W`` for the padded one, nnz for coo; for a
+        bucketed plan, the sum over sub-grids (compacted on pallas, padded
+        at per-bucket widths on jnp)."""
+        if self.buckets:
+            ms = self.meta_fwd.buckets
+            if self.backend == "pallas":
+                return sum(m.n_active for m in ms)
+            return sum(m.R * m.W for m in ms if m.n_rows)
         if self.backend == "coo":
             return int(self._fwd["src"].shape[0])
         if self.compact:
@@ -244,6 +357,15 @@ class GraphExecutionPlan:
         return self.ell.n_row_blocks * self.ell.width
 
     def describe(self, d: int = 128) -> dict:
+        if self.buckets:
+            return {
+                "mode": self.mode, "backend": self.backend,
+                "compact": self.compact, "bm": self.bm, "bk": self.bk,
+                "buckets": self.buckets,
+                "bucket_occupancy": list(self._occupancy),
+                "grid_size": self.grid_size,
+                "plan_bytes": self._plan_bytes,
+            }
         tm = traffic_model(self.ell, d)
         return {
             "mode": self.mode, "backend": self.backend,
@@ -302,6 +424,80 @@ def _side_arrays(ell: BlockEll, s_in: np.ndarray, s_out: np.ndarray,
     return a
 
 
+def _bucketed_side_arrays(g: Graph, scheme, s_in: np.ndarray,
+                          s_out: np.ndarray, backend: str, storage: str):
+    """Per-bucket arrays + metas for ONE direction of a bucketed plan.
+
+    Destination nodes are partitioned by ``g``'s in-degrees (so the
+    transpose direction re-buckets by its own skew) and remapped to a
+    bucket-local contiguous row space; sources stay global.  Returns
+    ``(arrays, metas, plan_bytes)``.
+    """
+    n = g.num_nodes
+    valid = (g.edge_mask if g.edge_mask is not None
+             else np.ones(g.num_edges, bool))
+    src = g.src[valid].astype(np.int64)
+    dst = g.dst[valid].astype(np.int64)
+    w = (g.edge_weight[valid] if g.edge_weight is not None
+         else np.ones(src.shape[0], np.float32))
+    idx_list = assign_buckets(g.in_degrees(), scheme)
+    bucket_of = np.zeros(n, np.int64)
+    local_of = np.zeros(n, np.int64)
+    for b, idx in enumerate(idx_list):
+        bucket_of[idx] = b
+        local_of[idx] = np.arange(idx.size)
+    dst_bucket = bucket_of[dst]
+
+    metas, buckets_a = [], []
+    node_active = np.zeros(n, bool)
+    plan_bytes = 0
+    for b, ((bm_b, _cut), idx) in enumerate(zip(scheme, idx_list)):
+        if idx.size == 0:
+            metas.append(BucketMeta(bm=bm_b, bk=bm_b, R=0, C=0, W=0,
+                                    n_active=0, n_rows=0))
+            buckets_a.append({})
+            continue
+        sel = dst_bucket == b
+        ell_b = build_blockell_coo(
+            src[sel], local_of[dst[sel]], w[sel], num_nodes=n,
+            num_rows=int(idx.size), bm=bm_b, bk=bm_b, storage=storage)
+        plan_bytes += ell_b.storage_bytes()
+        ab: Dict[str, jax.Array] = {"idx": jnp.asarray(idx.astype(np.int32))}
+        if backend == "jnp":
+            ab["block_cols"] = jnp.asarray(ell_b.block_cols)
+            ab["blocks"] = jnp.asarray(ell_b.dense_blocks(np.float32))
+            ab["s_out_sel"] = jnp.asarray(s_out[idx].astype(np.float32))
+            node_active[idx] = True          # jnp computes every bucket row
+            n_act = ell_b.n_active
+        else:
+            comp = ell_b.compact(np.uint8 if ell_b.implicit else np.float32)
+            ab["rows"] = jnp.asarray(comp.rows)
+            ab["cols"] = jnp.asarray(comp.cols)
+            ab["blocks"] = jnp.asarray(comp.blocks)
+            ab["s_in2d"] = _pad_scale(s_in, int(np.ceil(n / bm_b)), bm_b)
+            ab["s_out2d"] = _pad_scale(s_out[idx], ell_b.n_row_blocks, bm_b)
+            ab["s_in_diag2d"] = _pad_scale(s_in[idx], ell_b.n_row_blocks,
+                                           bm_b)
+            node_active[idx] = np.repeat(comp.row_active, bm_b)[:idx.size]
+            n_act = comp.n_active
+        metas.append(BucketMeta(bm=bm_b, bk=bm_b, R=ell_b.n_row_blocks,
+                                C=int(np.ceil(n / bm_b)), W=ell_b.width,
+                                n_active=int(n_act), n_rows=int(idx.size)))
+        buckets_a.append(ab)
+
+    perm = np.concatenate([idx for idx in idx_list if idx.size])
+    inv = np.zeros(n, np.int64)
+    inv[perm] = np.arange(n)
+    a: Dict[str, jax.Array] = {
+        "s_in": jnp.asarray(s_in), "s_out": jnp.asarray(s_out),
+        "buckets": buckets_a,
+        "inv_perm": jnp.asarray(inv.astype(np.int32)),
+    }
+    if backend == "pallas":
+        a["node_active"] = jnp.asarray(node_active)
+    return a, tuple(metas), int(plan_bytes)
+
+
 def _coo_arrays(g: Graph, s_in: np.ndarray, s_out: np.ndarray,
                 add_diag: bool, weighted: bool) -> Dict[str, jax.Array]:
     valid = (g.edge_mask if g.edge_mask is not None
@@ -324,13 +520,23 @@ def build_plan(g: Graph, mode: str = "gcn", *,
                backend: Optional[str] = None, compact: bool = True,
                storage: str = "auto", weighted: bool = False,
                interpret: Optional[bool] = None,
-               width: Optional[int] = None) -> GraphExecutionPlan:
+               width: Optional[int] = None,
+               buckets: str = "") -> GraphExecutionPlan:
     """Compile ``g`` into a :class:`GraphExecutionPlan`.
 
     ``backend=None`` picks ``"pallas"`` on TPU and ``"coo"`` elsewhere (use
     :func:`repro.exec.autotune_plan` to pick by measurement instead).  Square
     blocks are required (the transpose plan reuses the same tiling).
+
+    ``buckets`` is a degree-bucket signature (``"64@8+256"``: tile 64 for
+    in-degree < 8, tile 256 for the rest — see :mod:`repro.exec.bucketing`):
+    the plan then launches one sub-grid per bucket with that bucket's own
+    square tile and stitches the outputs, on the ``pallas`` (compact
+    sub-grids) and ``jnp`` (per-bucket padded einsum) backends.
     """
+    scheme = parse_bucket_sig(buckets)
+    if scheme:
+        bm = bk = max(b for b, _ in scheme)
     bm = bm or 128
     bk = bk or bm
     if bm != bk:
@@ -340,6 +546,12 @@ def build_plan(g: Graph, mode: str = "gcn", *,
         backend = "pallas" if jax.default_backend() == "tpu" else "coo"
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if scheme and backend == "coo":
+        raise ValueError("degree buckets need a block backend "
+                         "(pallas or jnp), not coo")
+    if scheme and not compact:
+        raise ValueError("bucketed plans imply slot compaction "
+                         "(compact=True)")
     if weighted and mode != "sum":
         raise ValueError("weighted adjacency only composes with mode='sum'")
     interp = ((jax.default_backend() != "tpu") if interpret is None
@@ -355,9 +567,35 @@ def build_plan(g: Graph, mode: str = "gcn", *,
                         bm=bm, bk=bk, R=R, C=int(np.ceil(g.num_nodes / bk)),
                         n_active=n_active, n=g.num_nodes, interpret=interp)
 
+    plan_bytes = 0
+    occupancy: list = []
     with obs.span("exec.plan.compile", cat="exec", backend=backend,
-                  mode=mode, bm=bm, compact=compact, n=g.num_nodes) as sp:
-        if backend == "coo":
+                  mode=mode, bm=bm, compact=compact, n=g.num_nodes,
+                  buckets=buckets) as sp:
+        if scheme:
+            # each direction bucketed by ITS OWN in-degrees: per-bucket
+            # transpose plans for the VJP
+            fwd, metas_f, bytes_f = _bucketed_side_arrays(
+                g_adj, scheme, s_in, s_out, backend, storage)
+            bwd, metas_b, bytes_b = _bucketed_side_arrays(
+                g_adj_t, scheme, s_out, s_in, backend, storage)
+            ell = ell_t = None
+            plan_bytes = bytes_f + bytes_b
+            meta_f = BucketedSideMeta(backend=backend, compact=compact,
+                                      add_diag=add_diag, n=g.num_nodes,
+                                      interpret=interp, buckets=metas_f)
+            meta_b = BucketedSideMeta(backend=backend, compact=compact,
+                                      add_diag=add_diag, n=g.num_nodes,
+                                      interpret=interp, buckets=metas_b)
+            occupancy = bucket_occupancy(g.in_degrees(), scheme)
+            for i, occ in enumerate(occupancy):
+                obs.gauge("exec.plan.bucket_nodes", bucket=i,
+                          bm=occ["bm"]).set(occ["nodes"])
+                obs.gauge("exec.plan.bucket_edges", bucket=i,
+                          bm=occ["bm"]).set(occ["edges"])
+            sp.set(n_active=sum(m.n_active for m in metas_f),
+                   plan_bytes=plan_bytes)
+        elif backend == "coo":
             # the coo path never touches tiles: defer block-ELL to first
             # access
             fwd = _coo_arrays(g_adj, s_in, s_out, add_diag, weighted)
@@ -380,7 +618,8 @@ def build_plan(g: Graph, mode: str = "gcn", *,
         num_nodes=g.num_nodes, add_diag=add_diag,
         meta_fwd=meta_f, meta_bwd=meta_b, _fwd=fwd, _bwd=bwd,
         _ell=ell, _ell_t=ell_t, _g_adj=g_adj, _g_adj_t=g_adj_t,
-        _storage=storage, _width=width)
+        _storage=storage, _width=width, buckets=buckets,
+        _plan_bytes=plan_bytes, _occupancy=occupancy)
 
 
 # ===========================================================================
@@ -446,11 +685,66 @@ def _self_term(x: jax.Array, w_self: jax.Array, self_coeff) -> jax.Array:
     return s
 
 
-def _pallas_layer(meta: SideMeta, a: Dict[str, jax.Array], x: jax.Array,
+def _bucketed_layer(meta: BucketedSideMeta, a: Dict[str, jax.Array],
+                    x: jax.Array, w: jax.Array, b: Optional[jax.Array],
+                    relu: bool, w_self: Optional[jax.Array] = None,
+                    self_coeff=None) -> jax.Array:
+    """Fused layer over degree buckets: one update-epilogue compact launch
+    per bucket (destination-row operands gathered into bucket-local order),
+    outputs stitched through the inverse permutation."""
+    chaos.fail_point("exec.pallas_launch")   # no-op unless a drill armed it
+    n, d_in = x.shape
+    d_out = w.shape[1]
+    dp_in, dp_out = _pad128(d_in), _pad128(d_out)
+    wp = jnp.pad(w, ((0, dp_in - d_in), (0, dp_out - d_out)))
+    bp = (None if b is None
+          else jnp.pad(b, (0, dp_out - d_out)).reshape(1, dp_out))
+    wsp = (None if w_self is None
+           else jnp.pad(w_self, ((0, dp_in - d_in), (0, dp_out - d_out))))
+    cf = (None if self_coeff is None
+          else jnp.reshape(jnp.asarray(self_coeff, jnp.float32), (1, 1)))
+    outs = []
+    for bmeta, ab in zip(meta.buckets, a["buckets"]):
+        if bmeta.n_rows == 0:
+            continue
+        if bmeta.n_active == 0:
+            outs.append(jnp.zeros((bmeta.n_rows, d_out), x.dtype))
+            continue
+        bm, bk, R, C = bmeta.bm, bmeta.bk, bmeta.R, bmeta.C
+        xp = jnp.pad(x, ((0, C * bk - n), (0, dp_in - d_in)))
+        xg = None
+        if meta.add_diag or w_self is not None:
+            xg = jnp.pad(x[ab["idx"]],
+                         ((0, R * bm - bmeta.n_rows), (0, dp_in - d_in)))
+        y = spmm_blockell_update_compact(
+            ab["rows"], ab["cols"], ab["blocks"], xp, ab["s_in2d"],
+            ab["s_out2d"], wp, bp, wsp, cf,
+            x_self=xg if w_self is not None else None,
+            x_diag=xg if meta.add_diag else None,
+            s_in_diag=ab["s_in_diag2d"] if meta.add_diag else None,
+            bm=bm, bk=bk, n_row_blocks=R, add_diag=meta.add_diag,
+            relu=relu, interpret=meta.interpret)
+        outs.append(y[:bmeta.n_rows, :d_out])
+    y = jnp.concatenate(outs, axis=0)[a["inv_perm"]]
+    fb = (x * (a["s_in"] * a["s_out"])[:, None] @ w if meta.add_diag
+          else jnp.zeros((n, d_out), x.dtype))
+    if w_self is not None:
+        fb = fb + _self_term(x, w_self, self_coeff)
+    if b is not None:
+        fb = fb + b
+    if relu:
+        fb = jnp.maximum(fb, 0.0)
+    return chaos.mangle("exec.kernel_result",
+                        jnp.where(a["node_active"][:, None], y, fb))
+
+
+def _pallas_layer(meta, a: Dict[str, jax.Array], x: jax.Array,
                   w: jax.Array, b: Optional[jax.Array], relu: bool,
                   w_self: Optional[jax.Array] = None, self_coeff=None
                   ) -> jax.Array:
     """One fused layer launch: SpMM + (two-)W-update epilogue (+bias/ReLU)."""
+    if isinstance(meta, BucketedSideMeta):
+        return _bucketed_layer(meta, a, x, w, b, relu, w_self, self_coeff)
     chaos.fail_point("exec.pallas_launch")   # no-op unless a drill armed it
     n, d_in = x.shape
     d_out = w.shape[1]
@@ -679,8 +973,8 @@ def build_layer_plan(g: Graph, mode: str = "gcn", *, d_in: int, d_out: int,
                      bm: Optional[int] = None, bk: Optional[int] = None,
                      backend: Optional[str] = None, compact: bool = True,
                      storage: str = "auto", interpret: Optional[bool] = None,
-                     gplan: Optional[GraphExecutionPlan] = None
-                     ) -> LayerExecutionPlan:
+                     gplan: Optional[GraphExecutionPlan] = None,
+                     buckets: str = "") -> LayerExecutionPlan:
     """Compile one GNN layer of shape ``(d_in -> d_out)`` over ``g``.
 
     ``order="auto"`` consults the FLOP/byte model; ``fuse=None`` turns the
@@ -696,7 +990,7 @@ def build_layer_plan(g: Graph, mode: str = "gcn", *, d_in: int, d_out: int,
     if gplan is None:
         gplan = build_plan(g, mode, bm=bm, bk=bk, backend=backend,
                            compact=compact, storage=storage,
-                           interpret=interpret)
+                           interpret=interpret, buckets=buckets)
     elif gplan.mode != mode:
         raise ValueError(f"prebuilt gplan has mode {gplan.mode!r}, layer "
                          f"plan wants {mode!r}")

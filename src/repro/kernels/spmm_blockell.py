@@ -52,6 +52,18 @@ Three variants:
 
 Destination blocks with zero active slots are never visited by the compacted
 grids; callers (repro.exec) fill those rows from the analytic diagonal term.
+
+Degree-binned multi-grid use (ISSUE 9): ``repro.exec.bucketing`` partitions
+destination NODES by in-degree and launches one compact kernel per bucket,
+each with its own square (bm, bk) tile.  A bucket's destination rows are
+remapped to a contiguous local space while sources stay global, so the
+destination-row-indexed operands (the ``add_diag`` self-term tiles and the
+two-W ``x_self`` tile) no longer live at ``rows[i]`` inside the global x —
+the compact kernels therefore accept optional separable destination
+operands (``x_diag`` / ``s_in_diag`` / ``x_self``): bucket-local gathered
+arrays substituted into the same operand slots.  Kernel bodies are
+unchanged; a single identity bucket is bit-identical to the unbucketed
+kernel.
 """
 from __future__ import annotations
 
@@ -217,6 +229,8 @@ def _make_compact_kernel(n_active: int, add_diag: bool):
 def spmm_blockell_compact(rows: jax.Array, cols: jax.Array,
                           blocks: jax.Array, x: jax.Array,
                           s_in: jax.Array, s_out: jax.Array,
+                          x_diag: jax.Array = None,
+                          s_in_diag: jax.Array = None,
                           *, bm: int, bk: int, n_row_blocks: int,
                           add_diag: bool, interpret: bool = False
                           ) -> jax.Array:
@@ -224,6 +238,10 @@ def spmm_blockell_compact(rows: jax.Array, cols: jax.Array,
 
     rows / cols: (n_active,) int32 sorted row-major (core.BlockCompaction);
     blocks: (n_active, bm, bk); x: (C*bk, d); s_in: (C, bk); s_out: (R, bm).
+    ``x_diag`` (R*bm, d) / ``s_in_diag`` (R, bm) override the ``add_diag``
+    self-term operands when destination rows are remapped (degree-bucketed
+    sub-grids); default is the unbucketed behavior where destination row
+    tiles are slices of the global x / s_in.
     Returns (R*bm, d); rows whose destination block has no active slot are
     left unwritten — repro.exec fills them with the diagonal fallback.
     """
@@ -244,7 +262,8 @@ def spmm_blockell_compact(rows: jax.Array, cols: jax.Array,
     if add_diag:
         in_specs += [pl.BlockSpec((bk, d), lambda i, rows, cols: (rows[i], 0)),
                      pl.BlockSpec((1, bk), lambda i, rows, cols: (rows[i], 0))]
-        operands += [x, s_in]
+        operands += [x if x_diag is None else x_diag,
+                     s_in if s_in_diag is None else s_in_diag]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_active,),
@@ -431,16 +450,21 @@ def spmm_blockell_update_compact(rows: jax.Array, cols: jax.Array,
                                  blocks: jax.Array, x: jax.Array,
                                  s_in: jax.Array, s_out: jax.Array,
                                  w: jax.Array, bias, w_self=None,
-                                 self_coeff=None, *, bm: int, bk: int,
+                                 self_coeff=None, x_self=None,
+                                 x_diag=None, s_in_diag=None,
+                                 *, bm: int, bk: int,
                                  n_row_blocks: int, add_diag: bool,
                                  relu: bool = False,
                                  interpret: bool = False) -> jax.Array:
     """Slot-compacted fused LAYER: grid is exactly ``n_active`` steps and each
     destination block's last step runs the W-update epilogue before its one
     (bm, d_out) store.  ``w_self``/``self_coeff`` add the two-W self term
-    exactly as in :func:`spmm_blockell_update`.  Rows whose destination block
-    has no active slot are left unwritten — repro.exec fills them with the
-    diagonal/self-term update.
+    exactly as in :func:`spmm_blockell_update`.  ``x_self`` (R*bm, d_in) /
+    ``x_diag`` (R*bm, d_in) / ``s_in_diag`` (R, bm) override the
+    destination-row-indexed operands for degree-bucketed sub-grids whose
+    destination rows are remapped; defaults slice the global x / s_in.
+    Rows whose destination block has no active slot are left unwritten —
+    repro.exec fills them with the diagonal/self-term update.
     """
     n_active = rows.shape[0]
     R = n_row_blocks
@@ -470,7 +494,7 @@ def spmm_blockell_update_compact(rows: jax.Array, cols: jax.Array,
                                   lambda i, rows, cols: (0, 0)),
                      pl.BlockSpec((bk, d_in),
                                   lambda i, rows, cols: (rows[i], 0))]
-        operands += [w_self, x]
+        operands += [w_self, x if x_self is None else x_self]
         if self_coeff is not None:
             in_specs.append(pl.BlockSpec((1, 1),
                                          lambda i, rows, cols: (0, 0),
@@ -480,7 +504,8 @@ def spmm_blockell_update_compact(rows: jax.Array, cols: jax.Array,
         in_specs += [pl.BlockSpec((bk, d_in),
                                   lambda i, rows, cols: (rows[i], 0)),
                      pl.BlockSpec((1, bk), lambda i, rows, cols: (rows[i], 0))]
-        operands += [x, s_in]
+        operands += [x if x_diag is None else x_diag,
+                     s_in if s_in_diag is None else s_in_diag]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_active,),

@@ -68,21 +68,31 @@ DEFAULT_TOL = 1.25
 # ---------------------------------------------------------------------------
 # candidate classes
 # ---------------------------------------------------------------------------
-def class_key(backend: str, bm: int, compact: bool, order: str = "-") -> str:
-    """Calibration-class key: ``(backend, bm, compact, order)``.  Graph-level
-    (aggregation-only) trials carry no order and use ``"-"``; ``fuse`` is
-    folded out — the fusion credit already lives in the model itself."""
-    return f"{backend}|bm{int(bm)}|c{int(bool(compact))}|{order}"
+def class_key(backend: str, bm: int, compact: bool, order: str = "-",
+              buckets: str = "") -> str:
+    """Calibration-class key: ``(backend, bm, compact, order[, buckets])``.
+    Graph-level (aggregation-only) trials carry no order and use ``"-"``;
+    ``fuse`` is folded out — the fusion credit already lives in the model
+    itself.  Degree-bucketed candidates append their bucket signature, so
+    bucketed and monolithic launches calibrate as distinct classes; the
+    empty signature adds nothing and keeps pre-bucketing keys byte-stable."""
+    base = f"{backend}|bm{int(bm)}|c{int(bool(compact))}|{order}"
+    return f"{base}|{buckets}" if buckets else base
 
 
 def cand_class(cand: Sequence) -> str:
     """Class key of a layer candidate ``(order, fuse, backend, bm, compact)``
-    or a graph candidate ``(backend, bm, compact)``."""
-    if len(cand) == 5:
-        order, _fuse, backend, bm, compact = cand
-        return class_key(backend, bm, compact, str(order))
-    backend, bm, compact = cand
-    return class_key(backend, bm, compact)
+    or a graph candidate ``(backend, bm, compact)``; bucketed variants of
+    either append a bucket-signature string as the final element.  (The
+    split is inlined — obs must import without jax, and repro.exec pulls
+    jax in at package import time.)"""
+    if len(cand) in (5, 6):
+        order, _fuse, backend, bm, compact = cand[:5]
+        buckets = str(cand[5]) if len(cand) == 6 else ""
+        return class_key(backend, bm, compact, str(order), buckets)
+    backend, bm, compact = cand[:3]
+    buckets = str(cand[3]) if len(cand) == 4 else ""
+    return class_key(backend, bm, compact, buckets=buckets)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,20 +131,27 @@ def observations_from_cache(cache_dir: Optional[str] = None,
             continue
         for row in e.get("table", ()):
             try:
-                if len(row) == 6:               # layer trial
-                    order, fuse, backend, bm, compact, us = row
-                    cand = (str(order), bool(fuse), str(backend), int(bm),
-                            bool(compact))
+                if len(row) in (6, 7):          # layer trial [+bucket sig]
+                    order, fuse, backend, bm, compact = row[:5]
+                    bsig = str(row[5]) if len(row) == 7 else ""
+                    us = row[-1]
+                    cand = ((str(order), bool(fuse), str(backend), int(bm),
+                             bool(compact)) + ((bsig,) if bsig else ()))
                     model = _at.model_layer_cost_dims(
                         n, ee, e["d_in"], e["d_out"], cand)
                     ckey = cand_class(cand)
                     label = (f"{order}{'+fuse' if fuse else ''} {backend} "
-                             f"bm={bm} compact={compact}")
-                elif len(row) == 4:             # graph (aggregation) trial
-                    backend, bm, compact, us = row
+                             f"bm={bm} compact={compact}"
+                             + (f" buckets={bsig}" if bsig else ""))
+                elif len(row) in (4, 5):        # graph trial [+bucket sig]
+                    backend, bm, compact = row[:3]
+                    bsig = str(row[3]) if len(row) == 5 else ""
+                    us = row[-1]
                     model = _at.model_graph_cost(n, ee, e["d"])
-                    ckey = class_key(backend, int(bm), bool(compact))
-                    label = f"{backend} bm={bm} compact={compact}"
+                    ckey = class_key(backend, int(bm), bool(compact),
+                                     buckets=bsig)
+                    label = (f"{backend} bm={bm} compact={compact}"
+                             + (f" buckets={bsig}" if bsig else ""))
                 else:
                     continue
             except (KeyError, TypeError, ValueError):
@@ -179,13 +196,15 @@ def observations_from_trace(doc) -> List[Observation]:
         group = (f"trace:{a.get('n')}n:{a.get('e')}e:{shape}"
                  f":{a.get('mode')}")
         fuse = bool(a.get("fuse", False))
+        bsig = str(a.get("buckets", "") or "")
         out.append(Observation(
             group=group,
             ckey=class_key(a.get("backend", "?"), int(a.get("bm", 0)),
                            bool(a.get("compact", False)),
-                           order if "order" in a else "-"),
+                           order if "order" in a else "-", bsig),
             label=(f"{order}{'+fuse' if fuse else ''} {a.get('backend')} "
-                   f"bm={a.get('bm')} compact={a.get('compact')}"),
+                   f"bm={a.get('bm')} compact={a.get('compact')}"
+                   + (f" buckets={bsig}" if bsig else "")),
             us=float(us), model=float(model), source="trace"))
     return out
 

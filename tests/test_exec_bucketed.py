@@ -1,0 +1,338 @@
+"""Degree-binned multi-grid block-ELL (ISSUE 9): bucket-scheme parsing,
+degenerate bucketings collapsing to the monolithic kernels bit-for-bit,
+stitched-grid parity (values + grads, fused epilogues included), autotune
+integration with variable-length cache rows, and calibration-guided
+candidate pruning."""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graph import Graph
+from repro.exec import (build_plan, build_layer_plan, autotune,
+                        autotune_layer, parse_bucket_sig, bucket_sig,
+                        assign_buckets, bucket_occupancy, default_scheme,
+                        bucket_candidates, bucket_layer_candidates,
+                        split_graph_cand, split_layer_cand, make_graph_cand,
+                        make_layer_cand, cached_layer_costs)
+from repro.exec.autotune import device_sig
+from repro.obs.audit import class_key, cand_class, save_calibration
+from repro import obs
+
+
+def _skewed_graph(n=300, n_hubs=8, hub_deg=40, seed=0):
+    """A few hub destinations own most edges; the tail owns 1-3 each."""
+    rng = np.random.default_rng(seed)
+    srcs, dsts = [], []
+    for v in range(n):
+        deg = hub_deg if v < n_hubs else int(rng.integers(1, 4))
+        nb = rng.choice(n, size=deg, replace=False)
+        srcs.extend(nb.tolist())
+        dsts.extend([v] * deg)
+    return Graph(src=np.array(srcs, np.int32), dst=np.array(dsts, np.int32),
+                 num_nodes=n)
+
+
+def _uniform_graph(n=200, deg=3, seed=1):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, n * deg).astype(np.int32)
+    dst = np.repeat(np.arange(n, dtype=np.int32), deg)
+    return Graph(src=src, dst=dst, num_nodes=n)
+
+
+def _x(g, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((g.num_nodes, d))
+                       .astype(np.float32))
+
+
+# ---------------------------------------------------------------- signatures
+def test_bucket_sig_round_trip():
+    for sig in ("64@8+256", "16@2+32@9+128", "32"):
+        assert bucket_sig(parse_bucket_sig(sig)) == sig
+    assert parse_bucket_sig("") == ()
+    assert bucket_sig(()) == ""
+
+
+def test_bucket_sig_validation():
+    with pytest.raises(ValueError):
+        parse_bucket_sig("64@8+256@16")      # last bucket must be unbounded
+    with pytest.raises(ValueError):
+        parse_bucket_sig("64+256")           # only the last may omit its cut
+    with pytest.raises(ValueError):
+        parse_bucket_sig("64@8+128@4+256")   # cuts must ascend
+    with pytest.raises(ValueError):
+        parse_bucket_sig("0@8+256")          # tiles must be positive
+
+
+def test_assign_buckets_partitions_every_node():
+    deg = np.array([0, 1, 2, 7, 8, 9, 100])
+    scheme = parse_bucket_sig("16@8+64")
+    idx = assign_buckets(deg, scheme)
+    assert [list(i) for i in idx] == [[0, 1, 2, 3], [4, 5, 6]]
+    occ = bucket_occupancy(deg, scheme)
+    assert [o["nodes"] for o in occ] == [4, 3]
+    assert [o["edges"] for o in occ] == [10, 117]
+    assert occ[1]["max_deg"] == 100
+
+
+def test_candidate_split_round_trip():
+    assert split_graph_cand(("jnp", 64, True)) == ("jnp", 64, True, "")
+    assert split_graph_cand(("jnp", 64, True, "16@8+64")) == \
+        ("jnp", 64, True, "16@8+64")
+    assert make_graph_cand("jnp", 64, True) == ("jnp", 64, True)
+    assert make_graph_cand("jnp", 64, True, "16@8+64") == \
+        ("jnp", 64, True, "16@8+64")
+    lc = ("aggregate_first", True, "pallas", 128, True)
+    assert split_layer_cand(lc) == lc + ("",)
+    assert split_layer_cand(lc + ("128@9+256",)) == lc + ("128@9+256",)
+    assert make_layer_cand(*lc) == lc
+
+
+def test_default_scheme_degenerates_to_empty():
+    # uniform degree: one populated bucket -> no scheme, no bucketed cands
+    g = _uniform_graph()
+    assert default_scheme(g.in_degrees(), 16, 64) == ()
+    assert bucket_candidates(g, "cpu") == []
+    assert bucket_layer_candidates(g, "cpu", 16, 8) == []
+    # empty degree vector
+    assert default_scheme(np.array([], np.int64), 16, 64) == ()
+    # skewed degree: a real two-bucket scheme, cut at p90 (min 2)
+    gs = _skewed_graph()
+    scheme = default_scheme(gs.in_degrees(), 16, 64)
+    assert len(scheme) == 2 and scheme[0][0] == 16 and scheme[1] == (64, None)
+    assert bucket_candidates(gs, "cpu")
+    for c in bucket_layer_candidates(gs, "cpu", 16, 8):
+        order, fuse, backend, bm, compact, sig = split_layer_cand(c)
+        assert order == "aggregate_first" and compact and sig
+
+
+# ------------------------------------------------- degenerate single bucket
+@pytest.mark.parametrize("mode", ["gcn", "sum", "mean"])
+def test_single_bucket_bit_identical_jnp(mode):
+    """One bucket holding every node must reproduce the monolithic jnp
+    padded engine bit-for-bit (same einsum, same accumulation order)."""
+    g = _skewed_graph()
+    x = _x(g)
+    mono = build_plan(g, mode, bm=32, bk=32, backend="jnp", compact=False)
+    one = build_plan(g, mode, bm=32, bk=32, backend="jnp", compact=True,
+                     buckets="32")
+    assert bool(jnp.array_equal(one.apply(x), mono.apply(x)))
+
+
+@pytest.mark.parametrize("mode", ["gcn", "sum"])
+def test_single_bucket_bit_identical_pallas(mode):
+    """One bucket holding every node must reproduce the monolithic compact
+    Pallas kernel bit-for-bit (identity permutation, same slot order)."""
+    g = _skewed_graph(n=200, n_hubs=4)
+    x = _x(g)
+    mono = build_plan(g, mode, bm=32, bk=32, backend="pallas", compact=True,
+                      interpret=True)
+    one = build_plan(g, mode, bm=32, bk=32, backend="pallas", compact=True,
+                     buckets="32", interpret=True)
+    assert bool(jnp.array_equal(one.apply(x), mono.apply(x)))
+
+
+def test_all_hub_graph_lands_in_one_bucket():
+    """Every node above the cut: bucket 0 is empty, bucket 1 is everything —
+    the empty bucket contributes nothing and the stitch is a no-op."""
+    n = 96
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, n, n * 10).astype(np.int32)
+    dst = np.repeat(np.arange(n, dtype=np.int32), 10)
+    g = Graph(src=src, dst=dst, num_nodes=n)
+    for backend in ("jnp", "pallas"):
+        p = build_plan(g, "gcn", bm=32, bk=32, backend=backend, compact=True,
+                       buckets="16@2+32", interpret=True)
+        ref = build_plan(g, "gcn", bm=32, bk=32, backend="coo")
+        x = _x(g)
+        assert float(jnp.abs(p.apply(x) - ref.apply(x)).max()) < 1e-5
+        occ = p.describe()["bucket_occupancy"]
+        assert occ[0]["nodes"] == 0 and occ[1]["nodes"] == n
+
+
+def test_empty_row_buckets_and_boundary_slots():
+    """Rows with zero in-edges fall in the tail bucket with no active
+    blocks; a bucket whose block-ELL has exactly one active slot still
+    launches and lands in the right stitched rows."""
+    n = 128
+    # node 0 gets one edge (1 active slot in the hub bucket after a cut at
+    # degree 1); nodes 64.. get nothing at all (all-empty rows)
+    src = np.array([5] + [7] * 3, np.int32)
+    dst = np.array([0, 1, 1, 1], np.int32)
+    g = Graph(src=src, dst=dst, num_nodes=n)
+    for backend in ("jnp", "pallas"):
+        p = build_plan(g, "gcn", bm=16, bk=16, backend=backend, compact=True,
+                       buckets="16@1+16", interpret=True)
+        ref = build_plan(g, "gcn", bm=16, bk=16, backend="coo")
+        x = _x(g)
+        assert float(jnp.abs(p.apply(x) - ref.apply(x)).max()) < 1e-5
+    # sum mode: empty rows must be exactly zero (no self-loop rescue)
+    p = build_plan(g, "sum", bm=16, bk=16, backend="jnp", compact=True,
+                   buckets="16@1+16")
+    y = p.apply(_x(g))
+    assert bool(jnp.array_equal(y[2:], jnp.zeros_like(y[2:])))
+
+
+def test_bucketed_rejects_bad_configs():
+    g = _skewed_graph(n=100, n_hubs=2)
+    with pytest.raises(ValueError):
+        build_plan(g, "gcn", backend="coo", buckets="16@8+64")
+    with pytest.raises(ValueError):
+        build_plan(g, "gcn", backend="jnp", compact=False, buckets="16@8+64")
+
+
+# --------------------------------------------------------- stitched parity
+@pytest.mark.parametrize("mode", ["gcn", "sum", "mean"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bucketed_parity_values_and_grads(mode, backend):
+    g = _skewed_graph()
+    x = _x(g)
+    ref = build_plan(g, mode, backend="coo")
+    p = build_plan(g, mode, backend=backend, compact=True,
+                   buckets="16@8+64", interpret=True)
+    y_ref, vjp_ref = jax.vjp(ref.apply, x)
+    y, vjp = jax.vjp(p.apply, x)
+    assert float(jnp.abs(y - y_ref).max()) < 1e-4
+    g_ref, = vjp_ref(y_ref)
+    gx, = vjp(y_ref)
+    assert float(jnp.abs(gx - g_ref).max()) < 1e-3
+
+
+def test_bucketed_fused_layer_parity_two_w_self_coeff():
+    """The fused one-launch epilogues (plain, two-W, self-coeff) through the
+    multi-grid: values + grads vs the unfused coo reference."""
+    g = _skewed_graph(n=200, n_hubs=4)
+    d_in, d_out = 12, 8
+    rng = np.random.default_rng(7)
+    x = _x(g, d_in)
+    w = jnp.asarray((rng.standard_normal((d_in, d_out)) / np.sqrt(d_in))
+                    .astype(np.float32))
+    ws = jnp.asarray((rng.standard_normal((d_in, d_out)) / np.sqrt(d_in))
+                     .astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(d_out).astype(np.float32))
+    for mode, kw in (("gcn", {}), ("mean", {"w_self": ws}),
+                     ("sum", {"w_self": ws, "self_coeff": 1.3})):
+        ref_g = build_plan(g, mode, backend="coo")
+        lp = build_layer_plan(g, mode, d_in=d_in, d_out=d_out,
+                              order="aggregate_first", fuse=True, bm=32,
+                              bk=32, backend="pallas", compact=True,
+                              buckets="16@8+32", interpret=True)
+        assert lp.fuse and lp.gplan.buckets == "16@8+32"
+
+        def ref_fn(x, w, b):
+            agg = ref_g.apply(x)
+            self_x = (kw.get("self_coeff", 1.0) * (x @ kw["w_self"])
+                      if "w_self" in kw else 0.0)
+            return jax.nn.relu(agg @ w + self_x + b)
+
+        def got_fn(x, w, b):
+            return lp.apply(x, w, b, relu=True, **kw)
+
+        y_ref, vjp_ref = jax.vjp(ref_fn, x, w, b)
+        y, vjp = jax.vjp(got_fn, x, w, b)
+        assert float(jnp.abs(y - y_ref).max()) < 1e-4, mode
+        for a, bb in zip(vjp(y_ref), vjp_ref(y_ref)):
+            assert float(jnp.abs(a - bb).max()) < 1e-3, mode
+
+
+# -------------------------------------------------------- autotune plumbing
+def test_autotune_races_bucketed_candidate(tmp_path):
+    g = _skewed_graph()
+    cands = [("jnp", 64, True), ("jnp", 64, True, "16@8+64")]
+    rec = autotune(g, 16, "gcn", candidates=cands, cache_dir=str(tmp_path),
+                   iters=1, prune=False)
+    assert sorted(len(r) for r in rec.table) == [4, 5]
+    assert rec.buckets in ("", "16@8+64")
+    rec2 = autotune(g, 16, "gcn", candidates=cands, cache_dir=str(tmp_path),
+                    iters=1)
+    assert rec2.from_cache and rec2.buckets == rec.buckets
+    assert rec2.as_config()["buckets"] == rec.buckets
+
+
+def test_autotune_layer_bucketed_cache_rows_round_trip(tmp_path):
+    g = _skewed_graph(n=150, n_hubs=4)
+    cands = [("update_first", False, "coo", 128, True),
+             ("aggregate_first", False, "jnp", 64, True, "16@8+64")]
+    rec = autotune_layer(g, 12, 8, "gcn", candidates=cands,
+                         cache_dir=str(tmp_path), iters=1, prune=False)
+    assert sorted(len(r) for r in rec.table) == [6, 7]
+    # the 7-element bucketed rows feed the DP's warm oracle losslessly
+    costs = cached_layer_costs(g, 12, 8, "gcn", cache_dir=str(tmp_path))
+    assert set(costs) == {tuple(c) for c in cands}
+    rec2 = autotune_layer(g, 12, 8, "gcn", candidates=cands,
+                          cache_dir=str(tmp_path), iters=1)
+    assert rec2.from_cache and rec2.buckets == rec.buckets
+
+
+def test_bucketed_class_keys_distinct():
+    base = cand_class(("jnp", 64, True))
+    bkt = cand_class(("jnp", 64, True, "16@8+64"))
+    assert base != bkt and bkt.endswith("|16@8+64")
+    lbase = cand_class(("aggregate_first", False, "jnp", 64, True))
+    lbkt = cand_class(("aggregate_first", False, "jnp", 64, True, "16@8+64"))
+    assert lbase != lbkt and lbkt.endswith("|16@8+64")
+    assert class_key("jnp", 64, True) == base
+
+
+def test_calibration_guided_pruning(tmp_path):
+    """A calibration table that rates one class hopeless (ratio 1000x) gets
+    that candidate skipped — and only that one; unknown classes always race;
+    prune=False opts out."""
+    g = _skewed_graph(n=150, n_hubs=4)
+    cache = str(tmp_path)
+    slow = ("jnp", 16, True)
+    fast = ("coo", 128, True)
+    unknown = ("jnp", 64, True, "16@8+64")
+    table = {"schema": "repro.obs/calibration@1",
+             "device_sig": device_sig(), "n_obs": 4, "global_ratio": 1.0,
+             "classes": {cand_class(fast): {"ratio": 1.0, "n": 2},
+                         cand_class(slow): {"ratio": 1000.0, "n": 2}},
+             "groups": {}, "misranks": []}
+    save_calibration(table, cache)
+
+    obs.enable()
+    try:
+        before = obs.snapshot()["counters"].get("exec.autotune.pruned", 0)
+        rec = autotune(g, 16, "gcn", candidates=[fast, slow, unknown],
+                       cache_dir=cache, iters=1)
+        after = obs.snapshot()["counters"].get("exec.autotune.pruned", 0)
+    finally:
+        obs.disable()
+    raced = [tuple(r[:3]) for r in rec.table]
+    assert slow not in raced                            # pruned
+    assert fast in raced                                # calibrated + kept
+    assert len(rec.table) == 2                          # unknown still raced
+    assert after - before == 1
+    # cache key is computed over the UNPRUNED candidate list: a second call
+    # with the same candidates hits the same entry
+    rec2 = autotune(g, 16, "gcn", candidates=[fast, slow, unknown],
+                    cache_dir=cache, iters=1)
+    assert rec2.from_cache
+    # opting out races everything
+    rec3 = autotune(g, 16, "gcn", candidates=[fast, slow, unknown],
+                    cache_dir=cache, iters=1, prune=False, force=True)
+    assert len(rec3.table) == 3
+
+
+def test_bucketed_plan_describe_and_gauges():
+    g = _skewed_graph()
+    obs.enable()
+    try:
+        p = build_plan(g, "gcn", backend="jnp", compact=True,
+                       buckets="16@8+64")
+        snap = obs.snapshot()
+    finally:
+        obs.disable()
+    d = p.describe()
+    assert d["buckets"] == "16@8+64"
+    occ = d["bucket_occupancy"]
+    assert sum(o["nodes"] for o in occ) == g.num_nodes
+    assert sum(o["edges"] for o in occ) == g.num_valid_edges
+    gauges = {k: v for k, v in snap["gauges"].items()
+              if k.startswith("exec.plan.bucket_")}
+    assert any("bucket_nodes" in k for k in gauges)
+    assert any("bucket_edges" in k for k in gauges)
