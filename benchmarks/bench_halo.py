@@ -6,12 +6,21 @@ aggregation three ways: halo exchange on the index-order graph, halo exchange
 after minhash-LSH reordering, and the GSPMD all-gather baseline (which ships
 the full feature table regardless of ordering).  The verdict line asserts the
 headline claim: reordered halo < index halo AND reordered halo < all-gather.
+
+The ``elastic`` rows replay an injected shard loss through the
+``repro.dist.elastic`` membership state machine and report the
+degraded-step fraction: how many of the run's steps were forced off the
+halo path (retry exhausted -> per-step allgather) before the eviction +
+repartition put the survivors back at halo speed.
 """
 from __future__ import annotations
 
+from repro.chaos import Fault, FaultPlan, armed
 from repro.core import minhash_reorder
 from repro.graph import build_halo_plan
 from repro.dist import build_send_plan, collective_bytes_estimate
+from repro.dist.elastic import ElasticAggregator, HealthPolicy, RetryPolicy, \
+    ShardHealth
 from .common import dataset, emit
 
 
@@ -35,6 +44,29 @@ def main() -> None:
              f"reordered_beats_index={beats_index} "
              f"reordered_beats_allgather={beats_allgather} "
              f"reduction_vs_allgather={est['reordered']['reduction_vs_allgather']:.2f}x")
+
+    # degraded-step fraction under an injected shard loss: the membership
+    # machine retries, degrades EVICT_AFTER steps to allgather, evicts, and
+    # every later step is back on the halo path over the survivors
+    gr = g.permute(minhash_reorder(g))
+    pol, hp = RetryPolicy(), HealthPolicy()
+    steps, kill_step, parts = 50, 10, 16
+    ladder = pol.max_retries + 1
+    agg = ElasticAggregator(gr, parts, policy=pol, health=ShardHealth(hp),
+                            probe=False)
+    plan = FaultPlan.of(Fault("dist.halo", "shard_loss",
+                              hit=kill_step, count=hp.evict_after * ladder,
+                              payload=(("shard", parts - 1),)))
+    with armed(plan):
+        trail = [agg.step_begin(i) for i in range(steps)]
+    degraded = sum(t["path"] == "allgather" for t in trail)
+    recovered_at = next(i for i, t in enumerate(trail)
+                        if t["evicted"] is not None) + 1
+    emit(f"halo/{parts}parts/elastic", 0.0,
+         f"degraded_step_fraction={degraded / steps:.3f} "
+         f"(shard killed @ step {kill_step}, {degraded} allgather steps, "
+         f"evicted after step {recovered_at - 1}, halo on "
+         f"{len(agg.active)} survivors from step {recovered_at})")
 
 
 if __name__ == "__main__":

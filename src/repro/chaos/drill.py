@@ -13,9 +13,19 @@ stack and asserts the graceful-degradation contract end to end:
   rejected, overload answers degrade to stale-flagged cache responses or
   shed explicitly, the accounting closes exactly, and every *admitted*
   request's modeled latency lands within the SLO deadline.
-* **dist** — an injected ``shard_loss`` on the halo exchange makes
-  :func:`repro.dist.resilient_halo_aggregate` fall back to the all-gather
-  path for the affected step, bit-matching the reference aggregation.
+* **dist** — a *transient* ``shard_loss`` on the halo exchange is absorbed
+  by :func:`repro.dist.resilient_halo_aggregate`'s seeded retry ladder (the
+  step recovers on the halo path, counting ``dist.halo_retry``); a
+  *persistent* fault that outlives the ladder degrades the step to the
+  all-gather path, bit-matching the reference aggregation.
+* **elastic** — the full membership drill: a shard killed mid-run is
+  retried, degraded, then **evicted** by
+  :class:`repro.dist.elastic.ElasticAggregator`; the survivors repartition
+  and training continues on the halo path (not pinned to allgather) with
+  final params within tolerance of the no-fault run; a later ``rejoin``
+  restores full width.  Buddy-mirrored checkpoints then lose one shard's
+  entire directory and restore **bit-identically** from the surviving
+  copies (``--gauntlet elastic`` runs just this drill).
 * **train** — an injected ``crash`` mid-run, then resume: the restored run's
   final parameters are **bit-identical** to an uninterrupted run's (the
   at-least-once replay contract).  The newest checkpoint is then corrupted
@@ -64,6 +74,16 @@ SCHEDULE_SPEC = {
     "dist.halo": [("shard_loss", 1)],
 }
 
+# the elastic drill's shape: kill shard 1 at step KILL_STEP for exactly
+# long enough that the retry ladder exhausts on EVICT_AFTER consecutive
+# steps — (max_retries + 1) site hits per fully-faulted step — and the
+# membership machine evicts.  Healthy steps consume one hit each.
+ELASTIC_STEPS = 12
+ELASTIC_KILL_STEP = 3
+ELASTIC_REJOIN_STEP = 9
+_LADDER_HITS = 3          # RetryPolicy.max_retries (2) + 1
+_EVICT_AFTER = 2          # HealthPolicy.evict_after
+
 
 def _plans(seed: int) -> Dict[str, FaultPlan]:
     gen = FaultPlan.generate(seed, SCHEDULE_SPEC)
@@ -74,6 +94,17 @@ def _plans(seed: int) -> Dict[str, FaultPlan]:
     return {"exec_launch": site("exec.pallas_launch"),
             "exec_nan": site("exec.kernel_result"),
             "dist": site("dist.halo"),
+            # outlives the whole retry ladder -> the step must degrade
+            "dist_persistent": FaultPlan.of(
+                Fault("dist.halo", "shard_loss", hit=0, count=_LADDER_HITS),
+                seed=seed),
+            # shard 1 dies at step KILL_STEP and stays dead until evicted:
+            # healthy steps burn 1 hit, faulted steps burn the full ladder
+            "elastic": FaultPlan.of(
+                Fault("dist.halo", "shard_loss", hit=ELASTIC_KILL_STEP,
+                      count=_EVICT_AFTER * _LADDER_HITS,
+                      payload=(("shard", 1),)),
+                seed=seed),
             "train": FaultPlan.of(Fault("train.step", "crash", hit=10),
                                   seed=seed)}
 
@@ -203,10 +234,15 @@ def _serve_gauntlet(seed: int, log: Callable) -> Dict:
 
 
 # ------------------------------------------------------------------- dist
+def _counter(name: str) -> int:
+    return obs.snapshot()["counters"].get(name, 0)
+
+
 def _dist_gauntlet(seed: int, plans: Dict[str, FaultPlan],
                    log: Callable) -> Dict:
     from ..dist import (allgather_aggregate, build_send_plan,
                         resilient_halo_aggregate)
+    from ..dist.elastic import ModeledClock
     from ..dist.gnn import pad_graph_nodes
     from ..graph import build_halo_plan
     parts = jax.device_count()
@@ -218,32 +254,155 @@ def _dist_gauntlet(seed: int, plans: Dict[str, FaultPlan],
                          axis_types=(jax.sharding.AxisType.Auto,))
     x = jnp.asarray(np.random.default_rng(seed + 3)
                     .standard_normal((g.num_nodes, 16)).astype(np.float32))
+    retries0 = _counter("dist.halo_retry{kind=shard_loss}")
+    fb0 = _counter("dist.halo_fallback{reason=shard_loss}")
+    clock = ModeledClock()
     with mesh:
         ref = np.asarray(allgather_aggregate(mesh, x, plan, local_n))
+        # transient: one faulted attempt, then the retry recovers on halo
         with inject.armed(plans["dist"]) as inj:
+            y_tr = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
+                                                       local_n, clock=clock))
+        _check(len(inj.fired) == 1 and inj.fired[0].kind == "shard_loss",
+               "dist: transient shard-loss fault did not fire")
+        _check(_counter("dist.halo_retry{kind=shard_loss}") > retries0,
+               "dist: transient fault did not count dist.halo_retry")
+        _check(_counter("dist.halo_fallback{reason=shard_loss}") == fb0,
+               "dist: transient fault degraded instead of recovering on halo")
+        # persistent: the fault outlives the ladder -> allgather fallback
+        with inject.armed(plans["dist_persistent"]) as inj_p:
             y_fb = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
-                                                       local_n))
+                                                       local_n, clock=clock))
         y_ok = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
-                                                   local_n))
-    _check(len(inj.fired) == 1 and inj.fired[0].kind == "shard_loss",
-           "dist: shard-loss fault did not fire")
+                                                   local_n, clock=clock))
+    _check(np.allclose(y_tr, ref, atol=1e-4),
+           "dist: retried halo step diverges from the reference")
+    _check(len(inj_p.fired) == _LADDER_HITS,
+           "dist: persistent fault did not exhaust the retry ladder")
+    _check(_counter("dist.halo_fallback{reason=shard_loss}") == fb0 + 1,
+           "dist: persistent fault did not degrade exactly one step")
     _check(np.allclose(y_fb, ref, atol=1e-4),
            "dist: fallback aggregation diverges from the all-gather path")
     _check(np.allclose(y_ok, ref, atol=1e-4),
            "dist: healthy halo step diverges after the fallback")
-    log(f"  dist: shard loss on {parts}-part mesh -> allgather fallback, "
-        f"next step healthy on halo")
+    _check(clock.now() > 0.0,
+           "dist: retry backoff was never charged to the modeled clock")
+    log(f"  dist: transient loss retried -> halo recovery; persistent loss "
+        f"-> allgather fallback on {parts}-part mesh "
+        f"(modeled backoff {clock.now() * 1e3:.2f}ms)")
     return {"parts": parts}
 
 
-# ------------------------------------------------------------------ train
+# ---------------------------------------------------------------- elastic
 def _noop(*a, **kw):
     pass
 
 
+def _elastic_gauntlet(seed: int, workdir: str, plans: Dict[str, FaultPlan],
+                      log: Callable) -> Dict:
+    from ..dist.elastic import train_elastic
+    from ..train.checkpoint import restore_mirrored_checkpoint
+    g = _graph(seed)
+    kill, rejoin, steps = ELASTIC_KILL_STEP, ELASTIC_REJOIN_STEP, ELASTIC_STEPS
+
+    # the no-fault oracle: same seed, same graph, full width throughout
+    ref = train_elastic(g, parts=2, steps=steps, seed=seed)
+    _check(all(p == "halo" for p in ref["paths"]),
+           "elastic: no-fault run left the halo path")
+
+    evict0 = _counter("dist.elastic.evict")
+    rejoin0 = _counter("dist.elastic.rejoin")
+    retry0 = _counter("dist.elastic.retry{kind=shard_loss}")
+    fb0 = _counter("dist.halo_fallback{reason=shard_loss}")
+    ckpt_dir = os.path.join(workdir, "elastic_ckpt")
+    with inject.armed(plans["elastic"]) as inj:
+        res = train_elastic(g, parts=2, steps=steps, seed=seed,
+                            rejoin_at=rejoin, ckpt_dir=ckpt_dir,
+                            ckpt_every=4)
+    trail = res["trail"]
+
+    # the step-path contract: retry -> degrade -> evict -> halo -> rejoin
+    evict_step = kill + _EVICT_AFTER - 1
+    want = (["halo"] * kill + ["allgather"] * _EVICT_AFTER
+            + ["halo"] * (steps - kill - _EVICT_AFTER))
+    _check(res["paths"] == want,
+           f"elastic: step paths {res['paths']} != expected {want}")
+    _check(all(t["retries"] == _LADDER_HITS - 1 for t in
+               trail[kill:kill + _EVICT_AFTER]),
+           "elastic: degraded steps did not walk the full retry ladder")
+    _check(trail[evict_step]["evicted"] == 1,
+           f"elastic: shard 1 was not evicted at step {evict_step}")
+    _check(all(t["parts"] == 1 for t in trail[evict_step:rejoin]),
+           "elastic: survivors did not repartition to width 1")
+    _check(all(t["parts"] == 2 for t in trail[rejoin:]),
+           "elastic: rejoin did not restore full width")
+    # post-recovery steps run at halo speed on the survivors, not pinned
+    # to the allgather fallback — the whole point of the repartition
+    _check(all(t["path"] == "halo" for t in trail[evict_step + 1:]),
+           "elastic: post-eviction steps stuck on the allgather path")
+    _check(len(inj.fired) == _EVICT_AFTER * _LADDER_HITS,
+           "elastic: fault schedule was not exactly exhausted at eviction")
+    _check(_counter("dist.elastic.evict") == evict0 + 1,
+           "elastic: eviction did not count dist.elastic.evict")
+    _check(_counter("dist.elastic.rejoin") == rejoin0 + 1,
+           "elastic: rejoin did not count dist.elastic.rejoin")
+    _check(_counter("dist.elastic.retry{kind=shard_loss}")
+           == retry0 + _EVICT_AFTER * (_LADDER_HITS - 1),
+           "elastic: retry counter disagrees with the ladder walk")
+    _check(_counter("dist.halo_fallback{reason=shard_loss}")
+           == fb0 + _EVICT_AFTER,
+           "elastic: degraded-step count disagrees with the schedule")
+    _check(res["clock_s"] > 0.0,
+           "elastic: backoff was never charged to the modeled clock")
+
+    # every membership's exchange is the same exact weighted segment-sum,
+    # so the faulted run tracks the oracle up to FP reduction order
+    for a, b in zip(jax.tree_util.tree_leaves(ref["params"]),
+                    jax.tree_util.tree_leaves(res["params"])):
+        _check(np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=1e-3, atol=5e-3),
+               "elastic: recovered run's final params diverge from the "
+               "no-fault oracle")
+
+    # buddy-mirrored restore: lose shard 0's ENTIRE directory (its primary
+    # slice + the mirror it kept for shard 1) -> bit-identical restore from
+    # the surviving copies
+    p_t = jax.tree_util.tree_map(np.zeros_like, res["params"])
+    o_t = jax.tree_util.tree_map(np.zeros_like, res["opt_state"])
+    mf0 = _counter("train.ckpt_mirror_fallback")
+    for dirpath, _, files in os.walk(os.path.join(ckpt_dir, "shard_00")):
+        for f in files:
+            if f.endswith(".npz"):
+                inject.corrupt_file(os.path.join(dirpath, f), seed=seed,
+                                    mode="truncate")
+    rp, ro, got = restore_mirrored_checkpoint(ckpt_dir, p_t, o_t,
+                                              num_shards=2)
+    _check(got == steps, f"elastic: mirrored restore served step {got}, "
+                         f"wanted {steps}")
+    _check(_counter("train.ckpt_mirror_fallback") > mf0,
+           "elastic: quorum restore did not use the buddy mirror")
+    bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(res["params"]),
+                        jax.tree_util.tree_leaves(rp)))
+    _check(bit_identical,
+           "elastic: mirrored restore after losing shard 0's files is not "
+           "bit-identical")
+    log(f"  elastic: kill shard 1 @ step {kill} -> {_LADDER_HITS - 1} "
+        f"retries/step, evicted @ step {evict_step}, repartitioned to 1 "
+        f"part on halo, rejoined @ step {rejoin}; params within tolerance "
+        f"of no-fault run; mirrored ckpt survived losing shard 0's dir")
+    return {"evicted_at": evict_step, "rejoined_at": rejoin,
+            "paths": res["paths"], "restore_step": got}
+
+
+# ------------------------------------------------------------------ train
+
+
 def _train_gauntlet(seed: int, workdir: str, plans: Dict[str, FaultPlan],
                     log: Callable) -> Dict:
-    from ..train.checkpoint import latest_step, restore_checkpoint
+    from ..train.checkpoint import (available_steps, latest_step,
+                                    restore_checkpoint)
     from ..train.loop import fit
     from ..train.optimizer import adam
     rng = np.random.default_rng(seed + 7)
@@ -310,19 +469,37 @@ def _train_gauntlet(seed: int, workdir: str, plans: Dict[str, FaultPlan],
     _check(obs.snapshot()["counters"].get("train.ckpt_fallback", 0)
            > fell_back_before,
            "train: ckpt fallback did not count train.ckpt_fallback")
+
+    # torn write: a crash mid-publish leaves only the dot-prefixed temp
+    # file; corrupt it and assert the checkpoint listing never sees it
+    steps_before = available_steps(crash_dir)
+    torn = os.path.join(crash_dir, ".step_00000099.npz.tmp")
+    with open(torn, "wb") as f:
+        f.write(b"\x00" * 512)
+    inject.corrupt_file(torn, seed=seed, mode="truncate")
+    _check(available_steps(crash_dir) == steps_before,
+           "train: a torn temp file leaked into the checkpoint listing")
     log(f"  train: crash@10 -> resume from ckpt 8, bit-identical replay; "
-        f"corrupt ckpt {newest} -> fell back to ckpt {got_step}")
+        f"corrupt ckpt {newest} -> fell back to ckpt {got_step}; torn temp "
+        f"file invisible to restore")
     return {"crash_hit": 10, "resumed_from": 8, "corrupt_fallback": got_step}
 
 
 # ----------------------------------------------------------------- driver
-def run_gauntlets(seed: int, workdir: str, log: Callable = print) -> Dict:
-    """One full pass; returns {schedules, summary, counters}."""
+GAUNTLETS = ("exec", "serve", "dist", "elastic", "train")
+
+
+def run_gauntlets(seed: int, workdir: str, log: Callable = print,
+                  which: tuple = GAUNTLETS) -> Dict:
+    """One full pass over ``which``; returns {schedules, summary, counters}."""
     plans = _plans(seed)
-    summary = {"exec": _exec_gauntlet(seed, workdir, plans, log),
-               "serve": _serve_gauntlet(seed, log),
-               "dist": _dist_gauntlet(seed, plans, log),
-               "train": _train_gauntlet(seed, workdir, plans, log)}
+    runners = {"exec": lambda: _exec_gauntlet(seed, workdir, plans, log),
+               "serve": lambda: _serve_gauntlet(seed, log),
+               "dist": lambda: _dist_gauntlet(seed, plans, log),
+               "elastic": lambda: _elastic_gauntlet(seed, workdir, plans,
+                                                    log),
+               "train": lambda: _train_gauntlet(seed, workdir, plans, log)}
+    summary = {name: runners[name]() for name in which}
     counters = {k: v for k, v in obs.snapshot()["counters"].items()
                 if not k.startswith(TIMING_COUNTERS)}
     return {"schedules": {k: p.describe() for k, p in plans.items()},
@@ -330,17 +507,19 @@ def run_gauntlets(seed: int, workdir: str, log: Callable = print) -> Dict:
 
 
 def run_drill(seed: int = 0, metrics_out: Optional[str] = None,
-              trace: Optional[str] = None, log: Callable = print) -> Dict:
+              trace: Optional[str] = None, log: Callable = print,
+              which: tuple = GAUNTLETS) -> Dict:
     """Run the gauntlet twice with the same seed; assert determinism."""
     runs: List[Dict] = []
     for attempt in (1, 2):
-        log(f"chaos drill: run {attempt}/2 (seed {seed})")
+        log(f"chaos drill: run {attempt}/2 (seed {seed}, "
+            f"gauntlets {'+'.join(which)})")
         obs.reset()
         obs.enable()
         if attempt == 2 and trace:
             obs.start_trace()
         with tempfile.TemporaryDirectory(prefix="chaos_drill_") as workdir:
-            runs.append(run_gauntlets(seed, workdir, log))
+            runs.append(run_gauntlets(seed, workdir, log, which=which))
     if metrics_out:
         obs.dump_metrics_jsonl(metrics_out)
         log(f"chaos drill: metrics -> {metrics_out}")
@@ -368,14 +547,20 @@ def main(argv=None) -> int:
         prog="python -m repro.chaos.drill",
         description="seeded chaos gauntlet across exec/serve/dist/train")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gauntlet", default="full",
+                    choices=("full",) + GAUNTLETS,
+                    help="run the full drill or a single gauntlet "
+                         "(e.g. 'elastic' for the shard-death drill)")
     ap.add_argument("--metrics-out", default=None,
                     help="dump the registry as metrics JSONL "
                          "(repro.obs.validate-able)")
     ap.add_argument("--trace", default=None,
                     help="write a Perfetto trace of the second run")
     args = ap.parse_args(argv)
+    which = GAUNTLETS if args.gauntlet == "full" else (args.gauntlet,)
     try:
-        run_drill(args.seed, metrics_out=args.metrics_out, trace=args.trace)
+        run_drill(args.seed, metrics_out=args.metrics_out, trace=args.trace,
+                  which=which)
     except DrillFailure as e:
         print(f"chaos drill: FAIL — {e}", file=sys.stderr)
         return 1

@@ -22,6 +22,10 @@ _EXPORTS = {
     "collective_bytes_estimate": "plan",
     "halo_aggregate": "halo", "allgather_aggregate": "halo",
     "resilient_halo_aggregate": "resilient",
+    "ElasticAggregator": "elastic", "ElasticTopology": "elastic",
+    "RetryPolicy": "elastic", "HealthPolicy": "elastic",
+    "ShardHealth": "elastic", "ModeledClock": "elastic",
+    "build_elastic_topology": "elastic", "train_elastic": "elastic",
     "distributed_decode_attention": "attention",
     "quantize_int8": "compress", "dequantize_int8": "compress",
     "int8_allreduce_psum": "compress", "topk_compress": "compress",

@@ -135,6 +135,7 @@ def make_dist_train_step(mesh, plan, send, local_n, opt,
 def train_distributed(arch: str = "gcn-cora", steps: int = 20,
                       parts: Optional[int] = None, lr: float = 1e-2,
                       hidden: int = 64, aggregator: str = "halo",
+                      ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                       log=print) -> Dict:
     """End-to-end sharded GNN training on whatever devices exist.
 
@@ -142,6 +143,12 @@ def train_distributed(arch: str = "gcn-cora", steps: int = 20,
     (default: one per device), then trains with every aggregation running
     through the mesh exchange.  Returns losses plus the collective-bytes
     estimate so callers can report the halo-vs-allgather headroom.
+
+    ``ckpt_dir`` enables **buddy-mirrored** checkpoints
+    (:func:`repro.train.checkpoint.save_mirrored_checkpoint`, one slice per
+    logical shard plus its neighbour's mirror) every ``ckpt_every`` steps —
+    the restore side needs only a quorum of one copy per slice, so losing a
+    whole shard's directory is survivable.
 
     Only the GCN/SAGE-style archs map onto the dist layer today (the layer
     is ``h W_self + AGG(h) W_neigh``); attention/equivariant GNNs need
@@ -185,12 +192,16 @@ def train_distributed(arch: str = "gcn-cora", steps: int = 20,
                                     aggregator)
         losses = []
         step_hist = obs.histogram("dist.step_seconds")
-        for _ in range(steps):
+        for i in range(steps):
             with obs.span("dist.step", cat="dist", aggregator=aggregator):
                 t0 = time.perf_counter()
                 params, opt_state, loss = step(params, opt_state, batch)
                 losses.append(float(loss))
             step_hist.observe(time.perf_counter() - t0)
+            if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+                from ..train.checkpoint import save_mirrored_checkpoint
+                save_mirrored_checkpoint(ckpt_dir, i + 1, params, opt_state,
+                                         num_shards=parts)
         obs.counter("dist.steps").inc(steps)
     log(f"dist[{arch}]: {steps} steps, loss {losses[0]:.4f} -> "
         f"{losses[-1]:.4f}")

@@ -1,22 +1,33 @@
-"""Straggler/shard-loss fallback for the halo exchange.
+"""Straggler/shard-loss degradation for the mesh halo exchange.
 
 ``halo_aggregate`` is the efficient collective (cut-edge rows only), but it
 is also the fragile one: it needs every shard of the ``all_to_all`` to show
 up.  :func:`resilient_halo_aggregate` is the drop-in wrapper that degrades
-instead of hanging: when the exchange fails — a lost shard raising out of
-the collective, an injected ``dist.halo`` fault from a chaos drill, or a
-wall-clock straggler timeout (``timeout_s``) — the *affected step* is
-recomputed through ``allgather_aggregate``, which ships the full feature
-table and depends on no per-shard send tables.  Correct but slower; the
-next step tries the halo path again (a straggler is transient, unlike a
-quarantined exec backend).
+instead of hanging — but no longer in one shot: a faulted exchange walks the
+:class:`repro.dist.elastic.RetryPolicy` ladder (seeded, bounded exponential
+backoff + jitter charged to a :class:`~repro.dist.elastic.ModeledClock`)
+before the *affected step* is recomputed through ``allgather_aggregate``,
+which ships the full feature table and depends on no per-shard send tables.
+A transient fault therefore recovers on the halo path at retry cost; only a
+fault that outlives the ladder (or the ``budget_s`` delay budget) degrades
+the step.  Persistent faults are the membership state machine's business:
+:class:`repro.dist.elastic.ElasticAggregator` evicts and repartitions.
 
-Every fallback counts ``dist.halo_fallback{reason=...}`` and drops a trace
-instant, so a drill (or production) can audit exactly which steps degraded.
+``timeout_s`` survives as the legacy alias for the ladder's delay budget.
+The old implementation force-materialized the halo result
+(``block_until_ready``), compared wall clock against the budget, and on
+overrun *discarded the finished compute* and ran a full allgather on top —
+one straggler cost two collectives plus a sync, and the wall-clock read made
+chaos drills nondeterministic.  The ladder charges stragglers to the modeled
+clock instead: no double compute, no wall-time in the deterministic path.
+
+Every retry counts ``dist.halo_retry{kind=...}``; every degraded step counts
+``dist.halo_fallback{reason=...}`` and drops a trace instant, so a drill (or
+production) can audit exactly which steps retried and which degraded.
 """
 from __future__ import annotations
 
-import time
+import dataclasses
 from typing import Optional
 
 import jax
@@ -24,6 +35,7 @@ import jax
 from . import compat  # noqa: F401
 from .. import obs
 from ..chaos import inject as chaos
+from .elastic import FAULT_KINDS, ModeledClock, RetryPolicy
 from .halo import allgather_aggregate, halo_aggregate
 
 
@@ -35,27 +47,43 @@ def _fallback(mesh, x, plan, local_n, axis_name, reason: str) -> jax.Array:
 
 def resilient_halo_aggregate(mesh, x, plan, send, local_n,
                              axis_name: Optional[str] = None,
-                             timeout_s: Optional[float] = None) -> jax.Array:
-    """``halo_aggregate`` that falls back to ``allgather_aggregate`` for the
-    affected step on shard loss, collective failure, or straggler timeout.
+                             timeout_s: Optional[float] = None, *,
+                             policy: Optional[RetryPolicy] = None,
+                             clock: Optional[ModeledClock] = None,
+                             step: int = 0) -> jax.Array:
+    """``halo_aggregate`` with a deterministic retry ladder and per-step
+    fallback to ``allgather_aggregate``.
 
-    ``timeout_s`` arms the wall-clock watchdog: the halo result is forced
-    (``block_until_ready``) and, if the exchange straggled past the budget,
-    discarded and recomputed via the all-gather path.  Leave it ``None``
-    under jit (forcing the value defeats async dispatch) — deterministic
-    drills use the ``dist.halo`` injection point instead.
+    A ``dist.halo`` fault (shard loss or straggler) is retried up to
+    ``policy.max_retries`` times with seeded exponential backoff charged to
+    ``clock`` (modeled time — never wall time); if the fault persists
+    through the ladder, or the accumulated backoff would exceed
+    ``policy.budget_s``, the step degrades to the all-gather path.  A real
+    exchange exception degrades immediately (it already burned the
+    attempt).  ``timeout_s`` is the legacy alias for ``budget_s``.
     """
-    f = chaos.fire("dist.halo")
-    if f is not None and f.kind in ("shard_loss", "straggler"):
-        return _fallback(mesh, x, plan, local_n, axis_name, f.kind)
-    try:
-        if timeout_s is None:
+    if policy is None:
+        policy = RetryPolicy(budget_s=timeout_s)
+    elif timeout_s is not None and policy.budget_s is None:
+        policy = dataclasses.replace(policy, budget_s=timeout_s)
+    clock = clock or ModeledClock()
+    waited = 0.0
+    for attempt in range(policy.max_retries + 1):
+        f = chaos.fire("dist.halo")
+        if f is not None and f.kind in FAULT_KINDS:
+            if attempt == policy.max_retries:
+                return _fallback(mesh, x, plan, local_n, axis_name, f.kind)
+            delay = policy.backoff(step, attempt)
+            if (policy.budget_s is not None
+                    and waited + delay > policy.budget_s):
+                return _fallback(mesh, x, plan, local_n, axis_name, f.kind)
+            waited += delay
+            clock.advance(delay)
+            obs.counter("dist.halo_retry", kind=f.kind).inc()
+            continue
+        try:
             return halo_aggregate(mesh, x, plan, send, local_n, axis_name)
-        t0 = time.perf_counter()
-        y = jax.block_until_ready(
-            halo_aggregate(mesh, x, plan, send, local_n, axis_name))
-        if time.perf_counter() - t0 > timeout_s:
-            return _fallback(mesh, x, plan, local_n, axis_name, "timeout")
-        return y
-    except Exception:
-        return _fallback(mesh, x, plan, local_n, axis_name, "exchange_error")
+        except Exception:
+            return _fallback(mesh, x, plan, local_n, axis_name,
+                             "exchange_error")
+    return _fallback(mesh, x, plan, local_n, axis_name, "retries_exhausted")

@@ -135,6 +135,16 @@ def make_layer_cand(order: str, fuse: bool, backend: str, bm: int,
     return base + (sig,) if sig else base
 
 
+def quarantine_class(backend: str, sig: str = "") -> str:
+    """The quarantine key class of a candidate: a bucketed plan fails (and
+    is quarantined) as ``"backend|sig"``, not as the bare backend — a broken
+    multi-grid launch must not ban the engine's single-grid plans, and vice
+    versa an engine-level quarantine (bare backend) bans every bucketing of
+    it.  Unbucketed candidates keep the bare backend, so every pre-bucketing
+    cache entry still matches."""
+    return f"{backend}|{sig}" if sig else backend
+
+
 def default_scheme(deg: np.ndarray, tail_bm: int, hub_bm: int,
                    cut: Optional[int] = None) -> Scheme:
     """Two-bucket scheme at the degree-90th-percentile cut (min 2).

@@ -35,6 +35,7 @@ from ..graph.structure import Graph
 from .plan import GraphExecutionPlan, build_plan
 from .autotune import (graph_fingerprint, quarantined_backends,
                        record_quarantine)
+from .bucketing import quarantine_class
 
 FALLBACK_CHAIN = ("pallas", "jnp", "coo")
 
@@ -89,7 +90,8 @@ class ResilientPlan:
                  backend: Optional[str] = None, bm: int = 128,
                  compact: bool = True, probe: bool = True,
                  cache_dir: Optional[str] = None,
-                 platform: Optional[str] = None):
+                 platform: Optional[str] = None, buckets: str = "",
+                 weighted: bool = False):
         self.g = g
         self.mode = mode
         self.bm = bm
@@ -97,24 +99,41 @@ class ResilientPlan:
         self.probe = probe
         self.cache_dir = cache_dir
         self.platform = platform
+        self.buckets = buckets
+        self.weighted = weighted
         self.fingerprint = graph_fingerprint(g)
         primary = backend or ("pallas" if jax.default_backend() == "tpu"
                               else "coo")
         chain = [primary] + [b for b in FALLBACK_CHAIN if b != primary]
         bad = quarantined_backends(self.fingerprint, platform=platform,
                                    cache_dir=cache_dir)
-        # never filter down to nothing: coo (pure segment-sum, no kernels)
-        # is the engine of last resort even while quarantined
-        self.chain: List[str] = ([b for b in chain if b not in bad]
+        # a quarantine verdict matches a chain entry by its candidate CLASS:
+        # the bucketed multi-grid plan ("pallas|16@8+64") is a different
+        # engine from the single-grid one ("pallas"), but a bare-backend
+        # quarantine bans every bucketing of that backend.  Never filter
+        # down to nothing: coo (pure segment-sum, no kernels, never
+        # bucketed) is the engine of last resort even while quarantined.
+        self.chain: List[str] = ([b for b in chain
+                                  if self._class(b) not in bad
+                                  and b not in bad]
                                  or ["coo"])
         self._plans: Dict[str, GraphExecutionPlan] = {}
         self.verdict: Optional[FallbackVerdict] = None
+
+    def _buckets_for(self, backend: str) -> str:
+        # the coo engine has no multi-grid form: the final demotion rung
+        # drops the bucket signature with the kernels
+        return "" if backend == "coo" else self.buckets
+
+    def _class(self, backend: str) -> str:
+        return quarantine_class(backend, self._buckets_for(backend))
 
     def plan_for(self, backend: str) -> GraphExecutionPlan:
         if backend not in self._plans:
             self._plans[backend] = build_plan(
                 self.g, self.mode, bm=self.bm, bk=self.bm, backend=backend,
-                compact=self.compact)
+                compact=self.compact, weighted=self.weighted,
+                buckets=self._buckets_for(backend))
         return self._plans[backend]
 
     @property
@@ -122,8 +141,9 @@ class ResilientPlan:
         return self.chain[0]
 
     def _quarantine(self, backend: str, reason: str) -> None:
-        record_quarantine(self.fingerprint, backend, reason=reason,
-                          platform=self.platform, cache_dir=self.cache_dir)
+        record_quarantine(self.fingerprint, self._class(backend),
+                          reason=reason, platform=self.platform,
+                          cache_dir=self.cache_dir)
         if backend in self.chain and len(self.chain) > 1:
             self.chain.remove(backend)
 

@@ -59,7 +59,7 @@ from .autotune import (LayerCandidate, autotune_layer, cached_layer_costs,
                        quarantined_backends,
                        _cache_path, _cache_load, _cache_put)
 from .bucketing import (bucket_layer_candidates, make_layer_cand,
-                        split_layer_cand)
+                        quarantine_class, split_layer_cand)
 from ..obs.audit import cand_class, class_ratios, load_calibration
 
 SELF_KINDS = ("none", "two_w", "self_coeff")
@@ -276,9 +276,15 @@ def build_cost_oracle(g: Graph, specs: Sequence[LayerSpec], *,
         bad = quarantined_backends(graph_fingerprint(g), platform=platform,
                                    cache_dir=cache_dir)
         if bad:
-            cands = tuple(
-                tuple(c for c in cs if c[2] not in bad) or cs
-                for cs in cands)
+            # verdicts are keyed by candidate CLASS: a bare backend bans
+            # every bucketing of it, a bucketed class ("pallas|16@8+64")
+            # bans exactly that multi-grid shape
+            def _ok(c):
+                backend, sig = split_layer_cand(c)[2], split_layer_cand(c)[5]
+                return (backend not in bad
+                        and quarantine_class(backend, sig) not in bad)
+            cands = tuple(tuple(c for c in cs if _ok(c)) or cs
+                          for cs in cands)
     measured: List[Dict[LayerCandidate, float]] = []
     for s in specs:
         measured.append(cached_layer_costs(

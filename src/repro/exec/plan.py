@@ -238,9 +238,16 @@ def _run_bucketed(meta: BucketedSideMeta, a: Dict[str, jax.Array],
                 for bmeta, ab in zip(meta.buckets, a["buckets"])
                 if bmeta.n_rows]
         return jnp.concatenate(outs, axis=0)[a["inv_perm"]]
-    chaos.fail_point("exec.pallas_launch")   # no-op unless a drill armed it
-    outs = [_pallas_bucket(meta, bmeta, ab, x)
-            for bmeta, ab in zip(meta.buckets, a["buckets"]) if bmeta.n_rows]
+    outs = []
+    for bmeta, ab in zip(meta.buckets, a["buckets"]):
+        if not bmeta.n_rows:
+            continue
+        # one fail point per sub-grid: a launch failure in ANY bucket
+        # aborts the whole multi-grid call, so fallback handling
+        # (exec.fallback.ResilientPlan) demotes the call consistently
+        # instead of stitching a half-bucketed output
+        chaos.fail_point("exec.pallas_launch")
+        outs.append(_pallas_bucket(meta, bmeta, ab, x))
     y = jnp.concatenate(outs, axis=0)[a["inv_perm"]]
     fb = (x * a["s_in"][:, None] * a["s_out"][:, None] if meta.add_diag
           else jnp.zeros_like(x))
@@ -692,7 +699,6 @@ def _bucketed_layer(meta: BucketedSideMeta, a: Dict[str, jax.Array],
     """Fused layer over degree buckets: one update-epilogue compact launch
     per bucket (destination-row operands gathered into bucket-local order),
     outputs stitched through the inverse permutation."""
-    chaos.fail_point("exec.pallas_launch")   # no-op unless a drill armed it
     n, d_in = x.shape
     d_out = w.shape[1]
     dp_in, dp_out = _pad128(d_in), _pad128(d_out)
@@ -710,6 +716,9 @@ def _bucketed_layer(meta: BucketedSideMeta, a: Dict[str, jax.Array],
         if bmeta.n_active == 0:
             outs.append(jnp.zeros((bmeta.n_rows, d_out), x.dtype))
             continue
+        # per-sub-grid fail point: any bucket's launch failure aborts the
+        # whole fused-layer call (consistent demotion, no half-stitched y)
+        chaos.fail_point("exec.pallas_launch")
         bm, bk, R, C = bmeta.bm, bmeta.bk, bmeta.R, bmeta.C
         xp = jnp.pad(x, ((0, C * bk - n), (0, dp_in - d_in)))
         xg = None

@@ -124,6 +124,11 @@ def main(argv=None):
     ap.add_argument("--parts", type=int, default=None,
                     help="number of graph shards for --dist "
                          "(default: device count)")
+    ap.add_argument("--aggregator", default="halo",
+                    choices=["halo", "allgather", "resilient"],
+                    help="collective for --dist: the halo exchange, the "
+                         "full-table allgather baseline, or the resilient "
+                         "ladder (retry then per-step allgather fallback)")
     ap.add_argument("--executor", default="auto",
                     choices=["auto", "segment", "blockell", "fused",
                              "forward"],
@@ -151,11 +156,14 @@ def main(argv=None):
                 if spec.family != "gnn":
                     ap.error(f"--dist supports GNN archs; {args.arch} is "
                              f"family '{spec.family}'")
-                if args.ckpt is not None:
-                    ap.error("--ckpt is not supported with --dist yet")
                 from ..dist import train_distributed
+                # --ckpt under --dist writes buddy-mirrored checkpoints
+                # (quorum restore survives one lost shard directory)
                 res = train_distributed(args.arch, steps=args.steps,
-                                        parts=args.parts)
+                                        parts=args.parts,
+                                        aggregator=args.aggregator,
+                                        ckpt_dir=args.ckpt,
+                                        ckpt_every=10 if args.ckpt else 0)
                 losses = res["losses"]
                 print(f"{args.arch} [dist]: {len(losses)} steps, loss "
                       f"{losses[0]:.4f} -> {losses[-1]:.4f}")

@@ -4,21 +4,39 @@ Format: one ``.npz`` per checkpoint step holding flattened leaves (keyed by
 pytree path) + a small JSON manifest (step, mesh shape, config digest).
 Restore re-shards onto whatever mesh is active — the elastic-restart path
 (fault.py) relies on this to resume on a smaller/larger mesh.
+
+Durability contract: every publish is **torn-write-proof** — the payload is
+written to a dot-prefixed temp file (invisible to ``available_steps``),
+fsync'd, atomically renamed over the final name, and the directory entry is
+fsync'd too, so a crash at any instant leaves either the old file or the
+complete new one, never a torn hybrid shadowing a good older checkpoint.
+
+Redundancy (``save_mirrored_checkpoint``): each logical shard's slice of
+the checkpoint is written twice — a primary copy in the shard's own
+directory and a mirror in its *buddy* shard's directory
+(``buddy_of(s) = (s + 1) % num_shards``).  Restore needs a quorum of one
+copy per shard: losing every file one shard hosts (its primary slice plus
+the mirror it keeps for its neighbour) still restores **bit-identically**
+from the surviving copies, which is what lets
+:mod:`repro.dist.elastic` treat a dead shard's disk as gone.
 """
 from __future__ import annotations
 
 import json
 import os
 import queue
+import re
 import threading
 import zipfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+
+_STEP_RE = re.compile(r"^step_(\d{8})\.npz$")
 
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
@@ -31,30 +49,62 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
     return out
 
 
+def _fsync_dir(dirname: str) -> None:
+    """Durably record a rename in the directory entry (best-effort on
+    filesystems/platforms that refuse O_RDONLY directory fds)."""
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _write_atomic(path: str, write_fn) -> None:
+    """tmp-write + fsync + rename + dir-fsync.  The temp name is
+    dot-prefixed so a crashed partial write can never be mistaken for a
+    checkpoint by the ``step_*`` listing."""
+    dirname = os.path.dirname(path) or "."
+    tmp = os.path.join(dirname, "." + os.path.basename(path) + ".tmp")
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(dirname)
+
+
+def _write_npz_atomic(path: str, blobs: Dict[str, np.ndarray]) -> None:
+    _write_atomic(path, lambda f: np.savez(f, **blobs))
+
+
 def save_checkpoint(ckpt_dir: str, step: int, params, opt_state,
                     extra: Optional[Dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    tmp = path + ".tmp.npz"
     blobs = {}
     for prefix, tree in (("params", params), ("opt", opt_state)):
         for k, v in _flatten_with_paths(tree).items():
             blobs[f"{prefix}:{k}"] = v
-    np.savez(tmp, **blobs)
-    os.replace(tmp, path)   # atomic publish: no torn checkpoints on crash
+    _write_npz_atomic(path, blobs)
     manifest = {"step": step, "leaves": len(blobs), **(extra or {})}
-    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f)
+    _write_atomic(os.path.join(ckpt_dir, f"step_{step:08d}.json"),
+                  lambda f: f.write(json.dumps(manifest).encode()))
     _gc_old(ckpt_dir, keep=3)
     return path
 
 
 def available_steps(ckpt_dir: str):
-    """All checkpoint steps on disk, newest first."""
+    """All checkpoint steps on disk, newest first (in-flight temp files and
+    stray names never match the strict ``step_XXXXXXXX.npz`` pattern)."""
     if not os.path.isdir(ckpt_dir):
         return []
-    steps = [int(f[5:13]) for f in os.listdir(ckpt_dir)
-             if f.startswith("step_") and f.endswith(".npz")]
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.match(f))]
     return sorted(steps, reverse=True)
 
 
@@ -63,9 +113,15 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[0] if steps else None
 
 
-def _load_step(ckpt_dir, step, params_template, opt_template, shardings):
-    data = np.load(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
+def _read_blobs(path: str) -> Dict[str, np.ndarray]:
+    """Eagerly load every member (CRC-checked), so corruption surfaces here
+    as an exception instead of later as silent garbage."""
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
 
+
+def _rebuild_trees(data: Dict[str, np.ndarray], params_template,
+                   opt_template, shardings):
     def rebuild(prefix, template, sh):
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
@@ -80,8 +136,14 @@ def _load_step(ckpt_dir, step, params_template, opt_template, shardings):
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     p_sh, o_sh = shardings if shardings else (None, None)
-    return (rebuild("params", params_template, p_sh),
-            rebuild("opt", opt_template, o_sh), step)
+    return rebuild("params", params_template, p_sh), rebuild(
+        "opt", opt_template, o_sh)
+
+
+def _load_step(ckpt_dir, step, params_template, opt_template, shardings):
+    data = _read_blobs(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
+    p, o = _rebuild_trees(data, params_template, opt_template, shardings)
+    return p, o, step
 
 
 def restore_checkpoint(ckpt_dir: str, params_template, opt_template,
@@ -120,14 +182,152 @@ def restore_checkpoint(ckpt_dir: str, params_template, opt_template,
 
 
 def _gc_old(ckpt_dir: str, keep: int) -> None:
-    steps = sorted(int(f[5:13]) for f in os.listdir(ckpt_dir)
-                   if f.startswith("step_") and f.endswith(".npz"))
+    steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                   if (m := _STEP_RE.match(f)))
     for s in steps[:-keep]:
         for ext in (".npz", ".json"):
             try:
                 os.remove(os.path.join(ckpt_dir, f"step_{s:08d}{ext}"))
             except OSError:
                 pass
+
+
+# ---------------------------------------------------------------------------
+# buddy-mirrored sharded checkpoints (quorum restore)
+# ---------------------------------------------------------------------------
+def buddy_of(shard: int, num_shards: int) -> int:
+    """The neighbour that keeps ``shard``'s mirror copy."""
+    return (shard + 1) % num_shards
+
+
+def _shard_dir(root: str, shard: int) -> str:
+    return os.path.join(root, f"shard_{shard:02d}")
+
+
+def _mirror_dir(root: str, shard: int, num_shards: int) -> str:
+    """Where ``shard``'s mirror lives: inside its buddy's directory, so
+    losing one shard's whole directory tree loses at most one copy of any
+    slice."""
+    return os.path.join(_shard_dir(root, buddy_of(shard, num_shards)),
+                        f"mirror_{shard:02d}")
+
+
+def _split_blobs(blobs: Dict[str, np.ndarray], num_shards: int
+                 ) -> List[Dict[str, np.ndarray]]:
+    """Deterministic round-robin of sorted leaf keys over shards."""
+    out: List[Dict[str, np.ndarray]] = [{} for _ in range(num_shards)]
+    for i, k in enumerate(sorted(blobs)):
+        out[i % num_shards][k] = blobs[k]
+    return out
+
+
+def save_mirrored_checkpoint(root: str, step: int, params, opt_state,
+                             num_shards: int,
+                             extra: Optional[Dict] = None) -> str:
+    """Write the checkpoint sharded over ``num_shards`` slices, each slice
+    to its own shard directory AND its buddy's mirror directory (both
+    torn-write-proof).  Keeps the newest 3 steps per directory."""
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    blobs = {}
+    for prefix, tree in (("params", params), ("opt", opt_state)):
+        for k, v in _flatten_with_paths(tree).items():
+            blobs[f"{prefix}:{k}"] = v
+    slices = _split_blobs(blobs, num_shards)
+    fname = f"step_{step:08d}.npz"
+    for s in range(num_shards):
+        dirs = [_shard_dir(root, s)]
+        if num_shards > 1:
+            dirs.append(_mirror_dir(root, s, num_shards))
+        for d in dirs:
+            os.makedirs(d, exist_ok=True)
+            _write_npz_atomic(os.path.join(d, fname), slices[s])
+            _gc_old(d, keep=3)
+    manifest = {"step": step, "num_shards": num_shards,
+                "leaves": len(blobs), **(extra or {})}
+    os.makedirs(root, exist_ok=True)
+    _write_atomic(os.path.join(root, f"step_{step:08d}.json"),
+                  lambda f: f.write(json.dumps(manifest).encode()))
+    obs.counter("train.ckpt_mirrored").inc()
+    return root
+
+
+def mirrored_available_steps(root: str, num_shards: int) -> List[int]:
+    """Steps with at least one copy of any slice on disk, newest first."""
+    steps: set = set()
+    for s in range(num_shards):
+        steps.update(available_steps(_shard_dir(root, s)))
+        if num_shards > 1:
+            steps.update(available_steps(_mirror_dir(root, s, num_shards)))
+    return sorted(steps, reverse=True)
+
+
+def _read_mirrored_step(root: str, step: int, num_shards: int
+                        ) -> Dict[str, np.ndarray]:
+    """Assemble one step from primaries, falling back per-shard to the buddy
+    mirror; raises if any shard has no readable copy (quorum lost)."""
+    fname = f"step_{step:08d}.npz"
+    merged: Dict[str, np.ndarray] = {}
+    for s in range(num_shards):
+        sources = [("primary", os.path.join(_shard_dir(root, s), fname))]
+        if num_shards > 1:
+            sources.append(
+                ("mirror", os.path.join(_mirror_dir(root, s, num_shards),
+                                        fname)))
+        last_err: Optional[Exception] = None
+        for src, path in sources:
+            try:
+                part = _read_blobs(path)
+            except Exception as e:      # torn, garbled, or missing copy
+                last_err = e
+                continue
+            if src == "mirror":
+                obs.counter("train.ckpt_mirror_fallback").inc()
+                obs.instant("train.ckpt_mirror_fallback", cat="train",
+                            shard=s, step=step)
+            merged.update(part)
+            break
+        else:
+            raise RuntimeError(
+                f"checkpoint quorum lost: shard {s} of step {step} has no "
+                f"readable copy (primary or buddy mirror)") from last_err
+    return merged
+
+
+def restore_mirrored_checkpoint(root: str, params_template, opt_template,
+                                num_shards: int,
+                                step: Optional[int] = None,
+                                shardings: Optional[Tuple] = None):
+    """Quorum restore of a mirrored checkpoint (bit-identical to the saved
+    trees as long as every slice survives in at least one copy).
+
+    With ``step=None``, a step whose quorum is lost falls back to the next
+    older step, counting ``train.ckpt_fallback`` — the same contract as
+    :func:`restore_checkpoint`.
+    """
+    if step is not None:
+        data = _read_mirrored_step(root, step, num_shards)
+        p, o = _rebuild_trees(data, params_template, opt_template, shardings)
+        return p, o, step
+    steps = mirrored_available_steps(root, num_shards)
+    if not steps:
+        raise FileNotFoundError(f"no mirrored checkpoint in {root}")
+    last_err: Optional[Exception] = None
+    for s in steps:
+        try:
+            data = _read_mirrored_step(root, s, num_shards)
+            p, o = _rebuild_trees(data, params_template, opt_template,
+                                  shardings)
+            return p, o, s
+        except (RuntimeError, OSError, ValueError, KeyError,
+                zipfile.BadZipFile) as e:
+            last_err = e
+            obs.counter("train.ckpt_fallback").inc()
+            obs.instant("train.ckpt_fallback", cat="train", step=s,
+                        error=type(e).__name__)
+    raise RuntimeError(
+        f"all {len(steps)} mirrored checkpoints in {root} unreadable"
+    ) from last_err
 
 
 class AsyncCheckpointer:

@@ -180,6 +180,76 @@ def test_clear_quarantine(small_graph, tmp_path):
     assert quarantined_backends(fp, cache_dir=str(tmp_path)) == set()
 
 
+# --------------------------------------------- bucketed (multi-grid) plans
+BUCKET_SIG = "16@8+64"
+
+
+def test_bucketed_resilient_plan_demotes_whole_call(small_graph, tmp_path):
+    from repro.exec import (ResilientPlan, build_plan, graph_fingerprint,
+                            quarantined_backends)
+    g = small_graph
+    x = jnp.asarray(np.random.default_rng(2)
+                    .standard_normal((g.num_nodes, 16)).astype(np.float32))
+    ref = np.asarray(build_plan(g, "gcn", backend="coo").apply(x))
+    rp = ResilientPlan(g, "gcn", backend="pallas", buckets=BUCKET_SIG,
+                       cache_dir=str(tmp_path))
+    # one launch fault in the FIRST bucket's sub-grid: the whole multi-grid
+    # call must abort and demote (no half-stitched output), landing on the
+    # jnp engine still bucketed with the same scheme
+    with armed(FaultPlan.of(Fault("exec.pallas_launch", "kernel_launch"))):
+        y = np.asarray(rp.apply(x))
+    assert rp.verdict.degraded and rp.verdict.backend == "jnp"
+    assert rp.plan_for("jnp").buckets == BUCKET_SIG
+    assert np.allclose(y, ref, atol=1e-4)
+    # quarantine keys the bucketed candidate CLASS, not the bare engine
+    bad = quarantined_backends(graph_fingerprint(g), cache_dir=str(tmp_path))
+    assert f"pallas|{BUCKET_SIG}" in bad and "pallas" not in bad
+
+
+def test_bucketed_quarantine_class_scoping(small_graph, tmp_path):
+    from repro.exec import (ResilientPlan, graph_fingerprint,
+                            record_quarantine)
+    fp = graph_fingerprint(small_graph)
+    # a bucketed-class verdict bans only that bucketing...
+    record_quarantine(fp, f"pallas|{BUCKET_SIG}", reason="test",
+                      cache_dir=str(tmp_path))
+    plain = ResilientPlan(small_graph, "gcn", backend="pallas",
+                          cache_dir=str(tmp_path))
+    assert "pallas" in plain.chain
+    bucketed = ResilientPlan(small_graph, "gcn", backend="pallas",
+                             buckets=BUCKET_SIG, cache_dir=str(tmp_path))
+    assert "pallas" not in bucketed.chain
+    # ...while a bare-engine verdict bans every bucketing of it
+    record_quarantine(fp, "jnp", reason="test", cache_dir=str(tmp_path))
+    bucketed2 = ResilientPlan(small_graph, "gcn", backend="jnp",
+                              buckets=BUCKET_SIG, cache_dir=str(tmp_path))
+    assert "jnp" not in bucketed2.chain
+    # the coo rung never buckets: the final demotion drops the signature
+    assert bucketed2._buckets_for("coo") == ""
+    assert bucketed2.plan_for("coo").buckets == ""
+
+
+def test_cost_oracle_drops_bucketed_class_keeps_plain(small_graph, tmp_path):
+    from repro.exec import (build_cost_oracle, gcn_chain, graph_fingerprint,
+                            record_quarantine)
+    from repro.exec.bucketing import make_layer_cand, split_layer_cand
+    fp = graph_fingerprint(small_graph)
+    record_quarantine(fp, f"pallas|{BUCKET_SIG}", reason="test",
+                      cache_dir=str(tmp_path))
+    grid = [make_layer_cand("aggregate_first", False, "coo", 128, True),
+            make_layer_cand("aggregate_first", True, "pallas", 128, True),
+            make_layer_cand("aggregate_first", True, "pallas", 64, True,
+                            BUCKET_SIG)]
+    oracle = build_cost_oracle(small_graph, gcn_chain([16, 16, 4]),
+                               candidates=[grid], cache_dir=str(tmp_path),
+                               use_cache=False)
+    kept = {(split_layer_cand(c)[2], split_layer_cand(c)[5])
+            for cs in oracle.cands for c in cs}
+    assert ("pallas", BUCKET_SIG) not in kept       # quarantined class gone
+    assert ("pallas", "") in kept                   # plain engine survives
+    assert ("coo", "") in kept
+
+
 # --------------------------------------------------- corrupt cache entries
 def test_autotune_corrupt_entry_is_a_miss(small_graph, tmp_path):
     from repro.exec import autotune
@@ -319,9 +389,8 @@ def test_batcher_bounded_queue_sheds():
 
 
 # ------------------------------------------------------------------- dist
-def test_resilient_halo_fallback(small_graph):
-    from repro.dist import (allgather_aggregate, build_send_plan,
-                            resilient_halo_aggregate)
+def _halo_setup(small_graph):
+    from repro.dist import build_send_plan
     from repro.dist.gnn import pad_graph_nodes
     from repro.graph import build_halo_plan
     parts = jax.device_count()
@@ -332,17 +401,63 @@ def test_resilient_halo_fallback(small_graph):
                          axis_types=(jax.sharding.AxisType.Auto,))
     x = jnp.asarray(np.random.default_rng(6)
                     .standard_normal((g.num_nodes, 8)).astype(np.float32))
-    local_n = g.num_nodes // parts
+    return g, plan, send, mesh, x, g.num_nodes // parts
+
+
+def test_resilient_halo_transient_fault_recovers_on_halo(small_graph):
+    from repro.dist import allgather_aggregate, resilient_halo_aggregate
+    from repro.dist.elastic import ModeledClock
+    g, plan, send, mesh, x, local_n = _halo_setup(small_graph)
+    clock = ModeledClock()
     with mesh:
         ref = np.asarray(allgather_aggregate(mesh, x, plan, local_n))
-        with armed(FaultPlan.of(Fault("dist.halo", "shard_loss"))):
+        # a one-shot fault is absorbed by the retry ladder: the step
+        # recovers on the halo path, no fallback, one retry counted
+        with armed(FaultPlan.of(Fault("dist.halo", "shard_loss"))) as inj:
             y = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
-                                                    local_n))
+                                                    local_n, clock=clock))
+    assert len(inj.fired) == 1
+    assert np.allclose(y, ref, atol=1e-4)
+    assert _counter("dist.halo_retry{kind=shard_loss}") == 1
+    assert _counter("dist.halo_fallback") == 0
+    assert clock.now() > 0.0            # backoff charged to the modeled clock
+
+
+def test_resilient_halo_persistent_fault_falls_back(small_graph):
+    from repro.dist import allgather_aggregate, resilient_halo_aggregate
+    from repro.dist.elastic import RetryPolicy
+    g, plan, send, mesh, x, local_n = _halo_setup(small_graph)
+    pol = RetryPolicy()
+    with mesh:
+        ref = np.asarray(allgather_aggregate(mesh, x, plan, local_n))
+        # the fault outlives the whole ladder -> per-step allgather fallback
+        with armed(FaultPlan.of(Fault("dist.halo", "shard_loss",
+                                      count=pol.max_retries + 1))) as inj:
+            y = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
+                                                    local_n, policy=pol))
         y2 = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
                                                  local_n))
+    assert len(inj.fired) == pol.max_retries + 1
     assert np.allclose(y, ref, atol=1e-4)
     assert np.allclose(y2, ref, atol=1e-4)
+    assert _counter("dist.halo_retry{kind=shard_loss}") == pol.max_retries
     assert _counter("dist.halo_fallback{reason=shard_loss}") == 1
+
+
+def test_resilient_halo_budget_caps_ladder(small_graph):
+    from repro.dist import allgather_aggregate, resilient_halo_aggregate
+    g, plan, send, mesh, x, local_n = _halo_setup(small_graph)
+    with mesh:
+        ref = np.asarray(allgather_aggregate(mesh, x, plan, local_n))
+        # legacy timeout_s becomes the delay budget: no backoff fits under
+        # an (effectively) zero budget, so the first fault degrades the step
+        with armed(FaultPlan.of(Fault("dist.halo", "straggler"))):
+            y = np.asarray(resilient_halo_aggregate(mesh, x, plan, send,
+                                                    local_n,
+                                                    timeout_s=1e-12))
+    assert np.allclose(y, ref, atol=1e-4)
+    assert _counter("dist.halo_retry") == 0
+    assert _counter("dist.halo_fallback{reason=straggler}") == 1
 
 
 # ------------------------------------------------------------------ train

@@ -1,0 +1,336 @@
+"""repro.dist.elastic: retry-ladder determinism, membership state machine
+(evict/repartition/rejoin) vs the single-device oracle, and buddy-mirrored
+checkpoint quorum restore."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.chaos import Fault, FaultPlan, armed, corrupt_file
+from repro.dist.elastic import (ACTIVE, EVICTED, SUSPECT, ElasticAggregator,
+                                HealthPolicy, ModeledClock, RetryPolicy,
+                                ShardHealth, train_elastic)
+from repro.graph import DatasetSpec, synthesize
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    obs.reset()
+    obs.enable()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def g():
+    return synthesize(DatasetSpec("elastic", 192, 1500, 12, 4, community=0.9,
+                                  num_communities=6, seed=11))
+
+
+def _counter(name: str) -> float:
+    return sum(v for k, v in obs.snapshot()["counters"].items()
+               if k == name or k.startswith(name + "{"))
+
+
+def _oracle(g, x):
+    """Single-device weighted segment-sum, computed independently in numpy."""
+    valid = (g.edge_mask if g.edge_mask is not None
+             else np.ones(g.num_edges, bool))
+    w = (g.edge_weight[valid] if g.edge_weight is not None
+         else np.ones(int(valid.sum()), np.float32))
+    ref = np.zeros((g.num_nodes, x.shape[1]), np.float32)
+    np.add.at(ref, g.dst[valid], np.asarray(x)[g.src[valid]] * w[:, None])
+    return ref
+
+
+def _x(g, seed=0, d=8):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((g.num_nodes, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------- ladder
+def test_retry_ladder_deterministic_and_bounded():
+    pol = RetryPolicy(max_retries=4, base_s=1e-3, factor=2.0,
+                      max_backoff_s=3e-3, jitter=0.25, seed=5)
+    a = pol.schedule(step=7)
+    b = RetryPolicy(max_retries=4, base_s=1e-3, factor=2.0,
+                    max_backoff_s=3e-3, jitter=0.25, seed=5).schedule(step=7)
+    assert a == b                       # pure function of (seed, step, attempt)
+    assert len(a) == 4
+    assert pol.schedule(step=8) != a    # step is part of the derivation
+    assert RetryPolicy(seed=6, max_retries=4, base_s=1e-3, factor=2.0,
+                       max_backoff_s=3e-3).schedule(step=7) != a
+    for attempt, delay in enumerate(a):
+        base = min(1e-3 * 2.0 ** attempt, 3e-3)
+        assert base <= delay <= base * 1.25
+
+
+def test_modeled_clock_charges_backoff():
+    clock = ModeledClock()
+    pol = RetryPolicy()
+    with armed(FaultPlan.of(Fault("dist.halo", "shard_loss"))):
+        agg = ElasticAggregator(_tiny(), 2, policy=pol, clock=clock)
+        info = agg.step_begin(0)
+    assert info["path"] == "halo" and info["retries"] == 1
+    assert clock.now() == pytest.approx(pol.backoff(0, 0))
+
+
+def _tiny():
+    return synthesize(DatasetSpec("tiny", 64, 400, 8, 3, community=0.9,
+                                  num_communities=4, seed=2))
+
+
+def test_shard_health_classification_and_decay():
+    h = ShardHealth(HealthPolicy(evict_after=2, decay=0.5))
+    assert h.classify(0) == "healthy"
+    h.record_failure(0)
+    assert h.classify(0) == "transient"
+    h.record_failure(0)
+    assert h.classify(0) == "persistent"
+    h.record_success(0)                 # recovery resets the streak...
+    assert h.classify(0) == "healthy"
+    assert 0.0 < h.score[0] < 2.0       # ...but the decayed score remembers
+    h.reset(0)
+    assert h.classify(0) == "healthy" and 0 not in h.score
+
+
+# ------------------------------------------------------------- aggregator
+def test_full_width_halo_matches_oracle(g):
+    agg = ElasticAggregator(g, 2)
+    x = _x(g)
+    ref = _oracle(g, x)
+    y = np.asarray(agg.aggregate(x, step=0))
+    assert np.allclose(y, ref, atol=1e-4)
+    assert np.allclose(np.asarray(agg.aggregate_fn("allgather")(x)), ref,
+                       atol=1e-4)
+
+
+def test_repartition_parity_2_1_2_vs_oracle(g):
+    agg = ElasticAggregator(g, 2)
+    x = _x(g, seed=1)
+    ref = _oracle(g, x)
+    v_full = agg.topology.version
+
+    agg.repartition_survivors(1)
+    assert agg.membership == {0: ACTIVE, 1: EVICTED}
+    assert agg.active == (0,) and agg.topology.num_parts == 1
+    assert np.allclose(np.asarray(agg.aggregate_fn("halo")(x)), ref,
+                       atol=1e-4)
+    assert _counter("dist.elastic.evict") == 1
+    assert _counter("dist.elastic.rows_migrated") > 0
+    snap = obs.snapshot()["gauges"]
+    assert snap["dist.membership{state=active}"] == 1
+    assert snap["dist.membership{state=evicted}"] == 1
+
+    agg.rejoin(1)
+    assert agg.membership == {0: ACTIVE, 1: ACTIVE}
+    assert agg.active == (0, 1)
+    # the full-width topology is memoized: rejoin reuses the warm plans
+    assert agg.topology.version == v_full
+    assert np.allclose(np.asarray(agg.aggregate_fn("halo")(x)), ref,
+                       atol=1e-4)
+    assert _counter("dist.elastic.rejoin") == 1
+    assert obs.snapshot()["gauges"]["dist.membership{state=evicted}"] == 0
+
+
+def test_evict_last_shard_refused(g):
+    agg = ElasticAggregator(g, 1)
+    with pytest.raises(RuntimeError):
+        agg.repartition_survivors(0)
+
+
+def test_rejoin_requires_evicted(g):
+    agg = ElasticAggregator(g, 2)
+    with pytest.raises(ValueError):
+        agg.rejoin(1)
+
+
+def test_persistent_fault_walks_ladder_then_evicts(g):
+    pol = RetryPolicy()                           # max_retries=2
+    hp = HealthPolicy(evict_after=2)
+    agg = ElasticAggregator(g, 2, policy=pol,
+                            health=ShardHealth(hp))
+    ladder = pol.max_retries + 1
+    plan = FaultPlan.of(Fault("dist.halo", "shard_loss",
+                              count=hp.evict_after * ladder,
+                              payload=(("shard", 1),)))
+    with armed(plan) as inj:
+        i1 = agg.step_begin(0)
+        assert i1["path"] == "allgather" and i1["retries"] == pol.max_retries
+        assert i1["evicted"] is None and agg.membership[1] == SUSPECT
+        i2 = agg.step_begin(1)
+        assert i2["path"] == "allgather" and i2["evicted"] == 1
+        assert agg.membership[1] == EVICTED and agg.active == (0,)
+        # fault schedule exactly exhausted: the next step is healthy halo
+        i3 = agg.step_begin(2)
+    assert i3["path"] == "halo" and i3["parts"] == 1
+    assert len(inj.fired) == hp.evict_after * ladder
+    assert _counter("dist.elastic.retry") == hp.evict_after * pol.max_retries
+    assert _counter("dist.halo_fallback") == hp.evict_after
+
+
+def test_transient_fault_recovers_and_clears_suspect(g):
+    agg = ElasticAggregator(g, 2)
+    with armed(FaultPlan.of(Fault("dist.halo", "shard_loss",
+                                  count=3, payload=(("shard", 0),)))):
+        info = agg.step_begin(0)        # full ladder faulted -> degrade
+        assert info["path"] == "allgather" and agg.membership[0] == SUSPECT
+    info2 = agg.step_begin(1)           # disarmed -> healthy, suspect clears
+    assert info2["path"] == "halo"
+    assert agg.membership[0] == ACTIVE
+    assert _counter("dist.elastic.evict") == 0
+
+
+def test_stale_fault_for_evicted_shard_ignored(g):
+    agg = ElasticAggregator(g, 2)
+    agg.repartition_survivors(1)
+    with armed(FaultPlan.of(Fault("dist.halo", "shard_loss",
+                                  payload=(("shard", 1),)))):
+        info = agg.step_begin(0)
+    assert info["path"] == "halo"       # the dead can't die again
+    assert _counter("dist.elastic.stale_fault") == 1
+    assert _counter("dist.halo_fallback") == 0
+
+
+# --------------------------------------------------------------- training
+def test_train_elastic_two_same_seed_runs_identical(g):
+    pol = RetryPolicy()
+    plan = FaultPlan.of(Fault("dist.halo", "shard_loss", hit=2, count=6,
+                              payload=(("shard", 1),)))
+
+    def run():
+        with armed(plan):
+            return train_elastic(g, parts=2, steps=8, seed=3,
+                                 policy=pol, rejoin_at=7)
+
+    a, b = run(), run()
+    assert a["paths"] == b["paths"]
+    assert a["trail"] == b["trail"]
+    assert a["losses"] == b["losses"]
+    assert a["clock_s"] == b["clock_s"]
+    for la, lb in zip(jax.tree_util.tree_leaves(a["params"]),
+                      jax.tree_util.tree_leaves(b["params"])):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_train_elastic_recovery_tracks_no_fault_run(g):
+    ref = train_elastic(g, parts=2, steps=8, seed=4)
+    assert ref["paths"] == ["halo"] * 8
+    with armed(FaultPlan.of(Fault("dist.halo", "shard_loss", hit=2, count=6,
+                                  payload=(("shard", 1),)))):
+        res = train_elastic(g, parts=2, steps=8, seed=4, rejoin_at=7)
+    assert res["paths"] == ["halo"] * 2 + ["allgather"] * 2 + ["halo"] * 4
+    assert res["trail"][3]["evicted"] == 1
+    assert [t["parts"] for t in res["trail"]] == [2, 2, 2, 1, 1, 1, 1, 2]
+    for a, b in zip(jax.tree_util.tree_leaves(ref["params"]),
+                    jax.tree_util.tree_leaves(res["params"])):
+        assert np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=1e-3, atol=5e-3)
+
+
+# ---------------------------------------------------- mirrored checkpoints
+def _trees(v: float):
+    params = [{"w": jnp.full((4, 3), v, jnp.float32),
+               "b": jnp.arange(3, dtype=jnp.float32) * v}]
+    opt = {"m": jnp.full((4, 3), v * 2, jnp.float32),
+           "count": jnp.asarray(3, jnp.int32)}
+    return params, opt
+
+
+def _zeros_like(tree):
+    return jax.tree_util.tree_map(np.zeros_like, tree)
+
+
+def test_mirrored_quorum_restore_bit_identical(tmp_path):
+    from repro.train.checkpoint import (buddy_of, restore_mirrored_checkpoint,
+                                        save_mirrored_checkpoint)
+    assert [buddy_of(s, 3) for s in range(3)] == [1, 2, 0]
+    p, o = _trees(1.5)
+    root = str(tmp_path)
+    save_mirrored_checkpoint(root, 4, p, o, num_shards=2)
+    # kill EVERY file shard 0 hosts: its primary slice and the mirror it
+    # keeps for shard 1 — one copy of each slice survives elsewhere
+    for dirpath, _, files in os.walk(os.path.join(root, "shard_00")):
+        for f in files:
+            if f.endswith(".npz"):
+                corrupt_file(os.path.join(dirpath, f), mode="garble")
+    rp, ro, step = restore_mirrored_checkpoint(root, _zeros_like(p),
+                                               _zeros_like(o), num_shards=2)
+    assert step == 4
+    assert _counter("train.ckpt_mirror_fallback") >= 1
+    for a, b in zip(jax.tree_util.tree_leaves((p, o)),
+                    jax.tree_util.tree_leaves((rp, ro))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mirrored_quorum_lost_raises(tmp_path):
+    from repro.train.checkpoint import (restore_mirrored_checkpoint,
+                                        save_mirrored_checkpoint)
+    p, o = _trees(2.0)
+    root = str(tmp_path)
+    save_mirrored_checkpoint(root, 1, p, o, num_shards=2)
+    # both copies of shard 0's slice gone -> quorum lost, explicit error
+    for path in (os.path.join(root, "shard_00", "step_00000001.npz"),
+                 os.path.join(root, "shard_01", "mirror_00",
+                              "step_00000001.npz")):
+        corrupt_file(path, mode="truncate")
+    with pytest.raises(RuntimeError, match="quorum"):
+        restore_mirrored_checkpoint(root, _zeros_like(p), _zeros_like(o),
+                                    num_shards=2, step=1)
+
+
+def test_mirrored_falls_back_to_older_step(tmp_path):
+    from repro.train.checkpoint import (restore_mirrored_checkpoint,
+                                        save_mirrored_checkpoint)
+    root = str(tmp_path)
+    p1, o1 = _trees(1.0)
+    save_mirrored_checkpoint(root, 1, p1, o1, num_shards=2)
+    p2, o2 = _trees(2.0)
+    save_mirrored_checkpoint(root, 2, p2, o2, num_shards=2)
+    # step 2 loses both copies of slice 0 -> restore serves step 1
+    for path in (os.path.join(root, "shard_00", "step_00000002.npz"),
+                 os.path.join(root, "shard_01", "mirror_00",
+                              "step_00000002.npz")):
+        corrupt_file(path, mode="truncate")
+    rp, ro, step = restore_mirrored_checkpoint(root, _zeros_like(p1),
+                                               _zeros_like(o1), num_shards=2)
+    assert step == 1
+    assert float(rp[0]["w"][0, 0]) == 1.0
+    assert _counter("train.ckpt_fallback") >= 1
+
+
+def test_single_shard_mirrored_roundtrip(tmp_path):
+    from repro.train.checkpoint import (restore_mirrored_checkpoint,
+                                        save_mirrored_checkpoint)
+    p, o = _trees(3.0)
+    save_mirrored_checkpoint(str(tmp_path), 7, p, o, num_shards=1)
+    rp, ro, step = restore_mirrored_checkpoint(str(tmp_path), _zeros_like(p),
+                                               _zeros_like(o), num_shards=1)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves((p, o)),
+                    jax.tree_util.tree_leaves((rp, ro))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_torn_temp_files_invisible_to_listing(tmp_path):
+    from repro.train.checkpoint import (available_steps, restore_checkpoint,
+                                        save_checkpoint)
+    d = str(tmp_path)
+    p, o = _trees(1.0)
+    save_checkpoint(d, 3, p, o)
+    # a crash mid-publish leaves the dot-prefixed temp; it must never be
+    # listed as a checkpoint, even garbled to look torn
+    torn = os.path.join(d, ".step_00000009.npz.tmp")
+    with open(torn, "wb") as f:
+        f.write(b"\x00" * 128)
+    corrupt_file(torn, mode="truncate")
+    # stray near-miss names don't parse either
+    open(os.path.join(d, "step_0000003x.npz"), "wb").close()
+    assert available_steps(d) == [3]
+    _, _, step = restore_checkpoint(d, _zeros_like(p), _zeros_like(o))
+    assert step == 3
